@@ -1,0 +1,51 @@
+"""Paper Figure 5 analog: per-sample inference time vs batch size. The
+paper's figure shows amortization of fixed costs over the batch; we measure
+the same curve for the dense and SPx-quantized paths on this host, plus the
+pipeline-feasibility margin (core/pipeline.py) for the same matmuls on the
+TPU target — the §3.1 load/compute-decoupling argument, quantified."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import plan_matmul_blocks
+from repro.data.mnist import make_dataset
+from repro.models.mlp_mnist import PAPER_LAYERS, paper_mlp_apply, \
+    paper_mlp_init
+from repro.nn.layers import Runtime, quantize_params
+
+BATCHES = (1, 8, 64, 256, 1024)
+
+
+def run(csv_rows: list):
+    params = paper_mlp_init(jax.random.PRNGKey(0))
+    qp = quantize_params(params, "sp2_4", min_size=1024)
+    rtq = Runtime(impl="auto")
+    x_all, _ = make_dataset(max(BATCHES), seed=9)
+
+    print("\n== Fig.5 analog: us/sample vs batch (host-measured) ==")
+    fp = jax.jit(lambda p, xx: paper_mlp_apply(p, xx))
+    qf = jax.jit(lambda p, xx: paper_mlp_apply(p, xx, rtq))
+    for b in BATCHES:
+        x = jnp.asarray(x_all[:b])
+        for name, fn, pp in (("fp32", fp, params), ("sp2_4", qf, qp)):
+            jax.block_until_ready(fn(pp, x))
+            t0 = time.time()
+            for _ in range(30):
+                jax.block_until_ready(fn(pp, x))
+            t = (time.time() - t0) / 30 / b
+            print(f"  B={b:5d} {name:6s}: {t*1e6:8.2f} us/sample")
+            csv_rows.append((f"fig5/{name}_b{b}", t * 1e6, b))
+
+    print("\n== pipeline feasibility on TPU target (paper §3.1 condition) ==")
+    for (m, n, k) in ((1024, 128, 784), (4096, 4096, 4096),
+                      (8192, 12800, 4096)):
+        for bits in (16, 4):
+            plan = plan_matmul_blocks(m, n, k, weight_bits=bits)
+            ok = "pipelined" if plan.pipelined else "LOAD-BOUND"
+            print(f"  {m}x{n}x{k} w{bits}: blocks ({plan.bm},{plan.bn},"
+                  f"{plan.bk}) margin {plan.margin:5.2f}x -> {ok}")
+            csv_rows.append((f"fig5/pipe_{m}x{n}x{k}_w{bits}",
+                             plan.margin, 1.0 if plan.pipelined else 0.0))
+    return csv_rows

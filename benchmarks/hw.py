@@ -1,0 +1,8 @@
+"""Target hardware constants (TPU v5e) used by the roofline analysis."""
+
+PEAK_BF16_FLOPS = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per-chip effective here)
+HBM_BYTES = 16e9              # per chip
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

@@ -1,0 +1,92 @@
+"""Benchmark harness: one function per paper table/figure plus the kernel
+microbenchmark. Prints ``name,us_per_call,derived`` CSV at the end.
+
+  PYTHONPATH=src python -m benchmarks.run [--skip-roofline-table]
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def kernel_microbench(csv_rows):
+    """spx_matmul: ref vs interpret-mode Pallas (correct-by-construction
+    check is in tests; here: bytes-moved accounting, the paper's actual
+    win on TPU)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.quantized import quantize_weight
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 1024, 1024
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)) * 0.03, jnp.float32)
+    print("\n== spx_matmul storage/traffic accounting ==")
+    dense_bytes = w.size * 2                      # bf16 weights
+    for scheme in ("sp2_8", "sp2_4"):
+        qt = quantize_weight(w, scheme)
+        qbytes = qt.nbytes_stored()
+        f = jax.jit(lambda xx, q: ops.spx_matmul(xx, q, impl="ref"))
+        jax.block_until_ready(f(x, qt))
+        t0 = time.time()
+        for _ in range(10):
+            jax.block_until_ready(f(x, qt))
+        t = (time.time() - t0) / 10
+        print(f"  {scheme:6s}: weight bytes {qbytes/1e3:8.1f}KB "
+              f"({dense_bytes/qbytes:.1f}x smaller than bf16), "
+              f"{t*1e6:8.0f} us/call (host ref path)")
+        csv_rows.append((f"kernel/spx_matmul_{scheme}", t * 1e6,
+                         dense_bytes / qbytes))
+
+
+def roofline_table(csv_rows):
+    """Summarize any roofline artifacts present (produced by
+    `python -m benchmarks.roofline --all`)."""
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    files = sorted(glob.glob(os.path.join(art, "roofline_*.json")))
+    if not files:
+        print("\n(no roofline artifacts yet — run benchmarks.roofline)")
+        return
+    print("\n== roofline summary (see EXPERIMENTS.md §Roofline) ==")
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("status") != "ok":
+            continue
+        csv_rows.append((f"roofline/{r['arch']}/{r['shape']}"
+                         + ("_dense" if not r.get("quantized_serving", True)
+                            else ""),
+                         r["bound_s"] * 1e6, r["roofline_fraction"]))
+        print(f"  {r['arch']:22s} {r['shape']:12s} "
+              f"{'q' if r.get('quantized_serving', True) else 'd'} "
+              f"dom={r['dominant']:10s} bound={r['bound_s']*1e3:9.2f}ms "
+              f"frac={r['roofline_fraction']:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-roofline-table", action="store_true")
+    args = ap.parse_args()
+
+    csv_rows: list = []
+    from benchmarks import fig5, quant_quality, table1
+    table1.run(csv_rows)
+    quant_quality.run(csv_rows)
+    fig5.run(csv_rows)
+    kernel_microbench(csv_rows)
+    if not args.skip_roofline_table:
+        roofline_table(csv_rows)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.4f},{derived:.4f}")
+
+
+if __name__ == '__main__':
+    main()

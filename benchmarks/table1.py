@@ -1,0 +1,82 @@
+"""Paper Table 1 analog: inference time-per-sample and energy across
+'devices' for the 784-128-10 MLP.
+
+The paper measured CPU (2.6 ms/sample, 47.2 W), GPU (0.3 ms, 115.2 W) and
+their FPGA (1.6 us, 10 W). Here:
+  * CPU rows are MEASURED on this host (fp32 dense and SPx-quantized paths);
+  * the TPU-v5e rows are MODELED from the roofline terms of the same matmul
+    sequence (documented formula, batch-1 latency-bound and batched
+    throughput-bound), standing in for the paper's accelerator row;
+  * energy = device power x time (CPU power from a 65W-class desktop part;
+    v5e ~170W) — same methodology as the paper's wattmeter column.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import TPU_V5E
+from repro.data.mnist import make_dataset
+from repro.models.mlp_mnist import PAPER_LAYERS, paper_mlp_apply, \
+    paper_mlp_init
+from repro.nn.layers import Runtime, quantize_params
+
+CPU_W = 65.0
+TPU_W = 170.0
+
+
+def _measure(fn, *args, iters=30):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters
+
+
+def modeled_tpu_time(batch: int, weight_bits: int) -> float:
+    """Latency model for one MLP forward on one v5e chip: per layer
+    max(compute, weight+act HBM traffic) + fixed dispatch overhead."""
+    t = 2e-6 * len(PAPER_LAYERS)              # dispatch/launch overhead
+    for din, dout in zip(PAPER_LAYERS[:-1], PAPER_LAYERS[1:]):
+        flops = 2.0 * batch * din * dout
+        w_bytes = din * dout * weight_bits / 8
+        a_bytes = batch * (din + dout) * 2
+        t += max(flops / TPU_V5E.peak_bf16_flops,
+                 (w_bytes + a_bytes) / TPU_V5E.hbm_bw)
+    return t
+
+
+def run(csv_rows: list):
+    x, _ = make_dataset(1024, seed=7)
+    params = paper_mlp_init(jax.random.PRNGKey(0))
+    xj = jnp.asarray(x)
+
+    fp = jax.jit(lambda p, xx: paper_mlp_apply(p, xx))
+    t_fp = _measure(fp, params, xj) / len(x)
+
+    rtq = Runtime(impl="auto")
+    qp = quantize_params(params, "sp2_4", min_size=1024)
+    q = jax.jit(lambda p, xx: paper_mlp_apply(p, xx, rtq))
+    t_q = _measure(q, qp, xj) / len(x)
+
+    t_tpu_b1 = modeled_tpu_time(1, 16)
+    t_tpu_b1_q = modeled_tpu_time(1, 4)
+    t_tpu_b1024 = modeled_tpu_time(1024, 4) / 1024
+
+    rows = [
+        ("cpu_fp32_measured", t_fp, CPU_W * t_fp),
+        ("cpu_sp2_4_measured", t_q, CPU_W * t_q),
+        ("tpu_v5e_bf16_modeled_b1", t_tpu_b1, TPU_W * t_tpu_b1),
+        ("tpu_v5e_sp2_4_modeled_b1", t_tpu_b1_q, TPU_W * t_tpu_b1_q),
+        ("tpu_v5e_sp2_4_modeled_b1024", t_tpu_b1024, TPU_W * t_tpu_b1024),
+        ("paper_cpu", 2.6e-3, 47.2 * 2.6e-3),
+        ("paper_gpu", 3e-4, 115.2 * 3e-4),
+        ("paper_fpga", 1.6e-6, 10.0 * 1.6e-6),
+    ]
+    print("\n== Table 1 analog: time/sample + energy/sample ==")
+    for name, t, e in rows:
+        print(f"  {name:28s} {t*1e6:10.2f} us/sample {e*1e6:10.3f} uJ")
+        csv_rows.append((f"table1/{name}", t * 1e6, e * 1e6))
+    return rows

@@ -1,0 +1,90 @@
+"""Quickstart: the paper's §4.1 experiment end to end.
+
+Trains the 784-128-10 sigmoid MLP (MSE loss, SGD, B=64, eta=0.5 — exactly
+Eq. 4.4-4.6) on the synthetic MNIST-like dataset, then deploys it through
+the SPx-quantized pipelined matmul path and compares accuracy + per-sample
+time across quantization schemes (the §3.2 story: PoT collapses at the
+tails, SP2/SPx recover).
+
+  PYTHONPATH=src python examples/quickstart.py [--epochs 4]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spx
+from repro.data.mnist import SynthDigits
+from repro.models.mlp_mnist import (paper_mlp_init, paper_mlp_loss,
+                                    paper_mlp_predict)
+from repro.nn.layers import Runtime, quantize_params
+from repro.training import make_optimizer
+
+
+def accuracy(params, x, y, rt=None):
+    pred = paper_mlp_predict(params, jnp.asarray(x), rt)
+    return float(jnp.mean((pred == jnp.asarray(y)).astype(jnp.float32)))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=64)     # paper: B=64
+    ap.add_argument("--lr", type=float, default=0.5)     # paper: eta=0.5
+    args = ap.parse_args(argv)
+
+    data = SynthDigits(n_train=8192, n_test=2048, batch_size=args.batch)
+    params = paper_mlp_init(jax.random.PRNGKey(0))
+    opt = make_optimizer("sgd", lr=args.lr)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y):
+        loss, grads = jax.value_and_grad(paper_mlp_loss)(params, x, y)
+        params, state = opt.update(params, grads, state)
+        return params, state, loss
+
+    print(f"== training {args.epochs} epochs (SGD lr={args.lr} B={args.batch},"
+          " MSE loss — paper Eq. 4.4-4.6) ==")
+    for epoch in range(args.epochs):
+        losses = []
+        for x, y in data.batches():
+            params, state, loss = step(params, state, jnp.asarray(x),
+                                       jnp.asarray(y))
+            losses.append(float(loss))
+        acc = accuracy(params, data.x_test, data.y_test)
+        print(f"epoch {epoch + 1}: loss {np.mean(losses):.4f} "
+              f"test acc {acc:.3f}")
+
+    print("\n== quantized inference (paper §3.2 schemes) ==")
+    x_test = jnp.asarray(data.x_test)
+    results = {}
+    fp_acc = accuracy(params, data.x_test, data.y_test)
+    results["float32"] = fp_acc
+    for scheme in ("uniform4", "pot4", "sp2_4", "uniform8", "sp2_8",
+                   "spx_8_x3"):
+        qp = quantize_params(params, scheme, min_size=1024)
+        rt = Runtime(impl="auto")
+        acc = accuracy(qp, data.x_test, data.y_test, rt)
+        width = spx.code_width(spx.scheme_levels(scheme))
+        results[scheme] = acc
+        print(f"  {scheme:10s} ({width}-bit): acc {acc:.3f} "
+              f"(drop {fp_acc - acc:+.3f})")
+
+    # per-sample timing (Table 1 analog on this host)
+    bench = jax.jit(lambda p, x: paper_mlp_predict(p, x))
+    bench(params, x_test).block_until_ready()
+    t0 = time.time()
+    for _ in range(20):
+        bench(params, x_test).block_until_ready()
+    t_fp = (time.time() - t0) / (20 * len(data.x_test))
+    print(f"\nper-sample inference (this host, fp32): {t_fp * 1e6:.2f} us")
+    print("(cross-device comparison incl. modeled TPU time: "
+          "benchmarks/table1.py)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Paper §4.2 analog: Q-learning with an MLP function approximator, with
+the inference path (action selection) running through the SPx-quantized
+pipelined matmul.
+
+OpenAI Gym isn't installable offline, so the environment is a self-contained
+numpy CartPole-class control task (pole balancing, 4-dim state, 2 actions)
+— the same role Acrobot-v1 plays in the paper: a control loop whose policy
+evaluation is MLP inference at the edge.
+
+  PYTHONPATH=src python examples/rl_qlearning.py [--episodes 120]
+"""
+import argparse
+import collections
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.mlp_mnist import mlp_net_apply, mlp_net_init
+from repro.nn.layers import Runtime, quantize_params
+from repro.training import make_optimizer
+
+
+class CartPole:
+    """Minimal cart-pole (Barto-Sutton dynamics), 200-step episodes."""
+
+    def __init__(self, seed=0):
+        self.rng = np.random.default_rng(seed)
+        self.state = None
+
+    def reset(self):
+        self.state = self.rng.uniform(-0.05, 0.05, 4)
+        self.t = 0
+        return self.state.copy()
+
+    def step(self, action):
+        x, x_dot, th, th_dot = self.state
+        force = 10.0 if action == 1 else -10.0
+        costh, sinth = np.cos(th), np.sin(th)
+        temp = (force + 0.05 * th_dot ** 2 * sinth) / 1.1
+        th_acc = (9.8 * sinth - costh * temp) / \
+            (0.5 * (4.0 / 3.0 - 0.1 * costh ** 2 / 1.1))
+        x_acc = temp - 0.05 * th_acc * costh / 1.1
+        dt = 0.02
+        self.state = np.array([x + dt * x_dot, x_dot + dt * x_acc,
+                               th + dt * th_dot, th_dot + dt * th_acc])
+        self.t += 1
+        done = (abs(self.state[0]) > 2.4 or abs(self.state[2]) > 0.21
+                or self.t >= 200)
+        return self.state.copy(), 1.0, done
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=120)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    random.seed(args.seed)
+    env = CartPole(args.seed)
+    qnet = mlp_net_init(jax.random.PRNGKey(args.seed), (4, 64, 64, 2))
+    opt = make_optimizer("adamw", lr=1e-3)
+    state = opt.init(qnet)
+    buffer: collections.deque = collections.deque(maxlen=10000)
+    gamma, eps = 0.99, 1.0
+
+    apply_q = jax.jit(lambda p, s: mlp_net_apply(p, s, act=jax.nn.relu))
+
+    @jax.jit
+    def train_step(params, state, s, a, r, s2, d):
+        q_next = jnp.max(mlp_net_apply(params, s2, act=jax.nn.relu), axis=-1)
+        target = r + gamma * q_next * (1.0 - d)
+
+        def loss_fn(p):
+            q = mlp_net_apply(p, s, act=jax.nn.relu)
+            q_sa = jnp.take_along_axis(q, a[:, None], axis=-1)[:, 0]
+            return jnp.mean((q_sa - jax.lax.stop_gradient(target)) ** 2)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.update(params, grads, state)
+        return params, state, loss
+
+    returns = []
+    for ep in range(args.episodes):
+        s = env.reset()
+        total = 0.0
+        done = False
+        while not done:
+            if random.random() < eps:
+                a = random.randrange(2)
+            else:
+                a = int(jnp.argmax(apply_q(qnet, jnp.asarray(s)[None]))[()])
+            s2, r, done = env.step(a)
+            buffer.append((s, a, r, s2, float(done)))
+            s = s2
+            total += r
+            if len(buffer) >= 128:
+                batch = random.sample(buffer, 64)
+                bs, ba, br, bs2, bd = map(np.array, zip(*batch))
+                qnet, state, _ = train_step(
+                    qnet, state, jnp.asarray(bs, jnp.float32),
+                    jnp.asarray(ba, jnp.int32), jnp.asarray(br, jnp.float32),
+                    jnp.asarray(bs2, jnp.float32), jnp.asarray(bd, jnp.float32))
+        eps = max(0.05, eps * 0.97)
+        returns.append(total)
+        if (ep + 1) % 20 == 0:
+            print(f"episode {ep + 1}: avg return (last 20) "
+                  f"{np.mean(returns[-20:]):.1f} eps={eps:.2f}")
+
+    # deploy the learned Q-network through the quantized inference path
+    print("\n== quantized policy evaluation (the paper's edge-inference "
+          "setting) ==")
+    rt = Runtime(impl="auto")
+    for scheme in (None, "sp2_8", "sp2_4"):
+        qp = quantize_params(qnet, scheme, min_size=256) if scheme else qnet
+        evals = []
+        for trial in range(10):
+            env_eval = CartPole(1000 + trial)
+            s = env_eval.reset()
+            done, total = False, 0.0
+            while not done:
+                q = mlp_net_apply(qp, jnp.asarray(s)[None], act=jax.nn.relu,
+                                  rt=rt)
+                s, r, done = env_eval.step(int(jnp.argmax(q[0])))
+                total += r
+            evals.append(total)
+        print(f"  {scheme or 'float32':8s}: avg return {np.mean(evals):.1f}")
+    return returns
+
+
+if __name__ == "__main__":
+    main()

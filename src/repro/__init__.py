@@ -1,0 +1,4 @@
+"""repro: production-grade JAX/TPU reproduction of 'A Deep Learning
+Inference Scheme Based on Pipelined Matrix Multiplication Acceleration
+Design and Non-uniform Quantization' (Zhang, Leung et al., 2021)."""
+__version__ = "1.0.0"

@@ -1,0 +1,17 @@
+"""Core: the paper's contribution — SPx non-uniform quantization and the
+pipelined (load/compute-decoupled) quantized matmul primitive."""
+from .spx import (SCHEMES, calibrate_minmax, calibrate_mse, codebook,
+                  dequantize_codes, fake_quantize, pack_int4, pot_levels,
+                  quantize, quantize_to_codes, scheme_levels, sp2_levels,
+                  spx_levels, uniform_levels, unpack_int4)
+from .quantized import QuantizedTensor, dequantize, quantize_weight, ref_matmul
+from .pipeline import TPU_V5E, BlockPlan, HwSpec, plan_matmul_blocks
+
+__all__ = [
+    "SCHEMES", "QuantizedTensor", "TPU_V5E", "BlockPlan", "HwSpec",
+    "calibrate_minmax", "calibrate_mse", "codebook", "dequantize",
+    "dequantize_codes", "fake_quantize", "pack_int4", "plan_matmul_blocks",
+    "pot_levels", "quantize", "quantize_to_codes", "quantize_weight",
+    "ref_matmul", "scheme_levels", "sp2_levels", "spx_levels",
+    "uniform_levels", "unpack_int4",
+]

@@ -1,0 +1,2 @@
+from .mnist import SynthDigits, make_dataset
+from .tokens import TokenStream, markov_batch

@@ -1,0 +1,114 @@
+"""jit'd public wrappers around the Pallas kernels with impl dispatch.
+
+``impl`` semantics everywhere:
+  * "auto"      — pallas on TPU, ref elsewhere (CPU CI, 512-dev dry-run)
+  * "pallas"    — compiled Mosaic kernel (TPU target)
+  * "interpret" — pallas_call(interpret=True): kernel body executed in
+                  Python/XLA on CPU; used by tests to validate the kernel
+                  logic bit-for-bit against the ref oracle
+  * "ref"       — pure-jnp oracle
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import spx
+from repro.core.quantized import QuantizedTensor
+
+from . import ref as ref_impl
+from .flash_attention import DEFAULT_BKV, DEFAULT_BQ, flash_attention_pallas
+from .spx_matmul import DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, spx_matmul_pallas
+
+__all__ = ["spx_matmul", "flash_attention", "resolve_impl"]
+
+_BLOCK_CANDIDATES = (512, 384, 256, 128, 64, 32, 16, 8)
+
+
+def resolve_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _divisor_block(dim: int, preferred: int) -> int | None:
+    if dim % preferred == 0:
+        return preferred
+    for c in _BLOCK_CANDIDATES:
+        if c <= dim and dim % c == 0:
+            return c
+    return None
+
+
+def spx_matmul(x: jax.Array, qt: QuantizedTensor, *, impl: str = "auto",
+               bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+               bk: int = DEFAULT_BK, out_dtype=None) -> jax.Array:
+    """x: (..., K) @ dequant(qt: (K, N)) -> (..., N)."""
+    impl = resolve_impl(impl)
+    k_dim, n_dim = qt.logical_shape
+    lut = qt.lut
+    scale = qt.scale.reshape(1, n_dim).astype(jnp.float32)
+
+    if impl == "ref":
+        # NO reshape: dot_general contracts x's last dim directly, so a
+        # (batch@data, seq@model, K) sharding survives — flattening to 2-D
+        # merges differently-sharded dims and forces a full gather
+        # (measured 16x replicated linear-layer compute, §Perf cell 2)
+        return ref_impl.spx_matmul_ref(x, qt.codes, scale, lut,
+                                       packed=qt.packed, out_dtype=out_dtype)
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+
+    bn_eff = _divisor_block(n_dim, bn)
+    bk_eff = _divisor_block(k_dim, bk)
+    if qt.packed and bn_eff is not None and bn_eff % 2:
+        bn_eff = None
+    if bn_eff is None or bk_eff is None:   # ragged dims: oracle fallback
+        out = ref_impl.spx_matmul_ref(x2, qt.codes, scale, lut,
+                                      packed=qt.packed, out_dtype=out_dtype)
+        return out.reshape(*lead, n_dim)
+
+    bm_eff = min(bm, m)
+    pad_m = (-m) % bm_eff
+    if pad_m:
+        x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
+    out = spx_matmul_pallas(
+        x2, qt.codes, scale, lut, packed=qt.packed,
+        bm=bm_eff, bn=bn_eff, bk=bk_eff, out_dtype=out_dtype,
+        interpret=(impl == "interpret"))
+    if pad_m:
+        out = out[:m]
+    return out.reshape(*lead, n_dim)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, impl: str = "auto",
+                    bq: int = DEFAULT_BQ, bkv: int = DEFAULT_BKV) -> jax.Array:
+    """GQA attention. q: (B, Hq, Sq, dh); k, v: (B, Hkv, Skv, dh);
+    Hq % Hkv == 0. Returns (B, Hq, Sq, dh)."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    rep = hq // hkv
+    impl = resolve_impl(impl)
+
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf = q.reshape(b * hq, sq, dh)
+    kf = k.reshape(b * hq, skv, dh)
+    vf = v.reshape(b * hq, skv, dh)
+
+    if impl == "ref":
+        return ref_impl.attention_ref(qf, kf, vf, causal=causal).reshape(q.shape)
+
+    bq_eff = _divisor_block(sq, bq)
+    bkv_eff = _divisor_block(skv, bkv)
+    if bq_eff is None or bkv_eff is None:
+        return ref_impl.attention_ref(qf, kf, vf, causal=causal).reshape(q.shape)
+    out = flash_attention_pallas(qf, kf, vf, causal=causal, bq=bq_eff,
+                                 bkv=bkv_eff, interpret=(impl == "interpret"))
+    return out.reshape(q.shape)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel. These are the source of truth
+for correctness tests (interpret-mode kernels must allclose against these)
+and the implementation used on non-TPU backends and in the 512-device
+dry-run (mathematically identical; XLA:TPU would fuse the dequant into the
+matmul the same way the kernel does by hand)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spx
+
+__all__ = ["spx_matmul_ref", "attention_ref"]
+
+
+def spx_matmul_ref(x, codes, scale, lut, *, packed: bool, out_dtype=None):
+    """x:(..., K) @ (lut[codes:(K,N)] * scale:(1,N)) -> (..., N).
+    Contracts x's LAST dim without flattening leading dims (their sharding
+    must survive — see ops.spx_matmul)."""
+    out_dtype = out_dtype or x.dtype
+    if packed:
+        codes = spx.unpack_int4(codes)
+    w = jnp.take(lut, codes.astype(jnp.int32), axis=0)   # (K, N) in lut dtype
+    acc = jax.lax.dot_general(
+        x, w.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return (acc * scale).astype(out_dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, out_dtype=None):
+    """Naive softmax attention. q:(BH,Sq,dh), k/v:(BH,Skv,dh)."""
+    out_dtype = out_dtype or q.dtype
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (dh ** 0.5)
+    if causal:
+        sq, skv = s.shape[-2], s.shape[-1]
+        mask = (jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :])
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return out.astype(out_dtype)

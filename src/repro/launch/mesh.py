@@ -1,0 +1,24 @@
+"""Production meshes. A function (not a module constant) so importing never
+touches jax device state. Single pod: 16x16 = 256 chips (data x model).
+Multi-pod: 2x16x16 = 512 chips; the 'pod' axis crosses DCN and is used only
+for data parallelism (gradient all-reduce) — parameters never shard over it.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (CPU tests)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

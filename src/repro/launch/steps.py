@@ -1,0 +1,302 @@
+"""Step-function builders for training and serving — shared by the dry-run,
+the roofline harness, and the real drivers. Everything is built from
+ShapeDtypeStructs (jax.eval_shape) so a 1T-param config costs no memory
+until a real driver decides to materialize it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as ed
+from repro.models import lm as lm_mod
+from repro.nn.layers import Runtime, quantize_params
+from repro.sharding import ShardingPolicy, make_policy
+from repro.training.optimizer import clip_by_global_norm, make_optimizer
+
+__all__ = ["StepBundle", "build_step", "make_runtime"]
+
+GIANT_PARAMS = 30e9    # above this: SPx-quantized (8-bit) AdamW moments
+SERVE_SCHEME = "sp2_4"      # the paper's 4-bit SP2 for weight-only serving
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable
+    args: tuple                  # ShapeDtypeStructs with shardings attached
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple
+    meta: dict
+
+
+def make_runtime(cfg: ArchConfig, mesh: Mesh | None, shape: ShapeConfig | None,
+                 *, impl: str = "ref", remat: str = "none",
+                 unroll: bool = False) -> Runtime:
+    data_axes: tuple = ()
+    if mesh is not None:
+        axes = dict(mesh.shape)
+        data_axes = tuple(a for a in ("pod", "data") if a in axes)
+        if shape is not None:
+            import numpy as np
+            n_data = int(np.prod([axes[a] for a in data_axes])) or 1
+            if shape.global_batch % n_data:
+                # long_500k (B=1): batch replicates over data axes
+                data_axes = tuple(a for a in data_axes
+                                  if shape.global_batch % axes[a] == 0)
+    return Runtime(impl=impl, q_chunk=1024, remat=remat, mesh=mesh,
+                   decode_seq_axis="model" if mesh is not None else None,
+                   data_axes=data_axes, model_axis="model", unroll=unroll)
+
+
+def _sds_with_sharding(tree_sds, ns_tree):
+    return jax.tree_util.tree_map(
+        lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=ns),
+        tree_sds, ns_tree)
+
+
+def _params_sds(cfg: ArchConfig, dtype, quantized: bool):
+    def init():
+        key = jax.random.PRNGKey(0)
+        if cfg.enc_dec:
+            p = ed.encdec_init(key, cfg, dtype=dtype)
+        else:
+            p = lm_mod.lm_init(key, cfg, dtype=dtype)
+        if quantized:
+            p = quantize_params(p, SERVE_SCHEME)
+        return p
+    return jax.eval_shape(init)
+
+
+def _batch_sds(cfg: ArchConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+           "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.mrope_sections is not None:
+        out["positions"] = jax.ShapeDtypeStruct((b, 3, s), jnp.int32)
+    if cfg.enc_dec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def _caches_sds(cfg: ArchConfig, b: int, s: int, kv_quant: bool = False):
+    if cfg.enc_dec:
+        return jax.eval_shape(
+            lambda: ed.encdec_init_caches(cfg, b, s, dtype=jnp.bfloat16,
+                                          kv_quant=kv_quant))
+    return jax.eval_shape(
+        lambda: lm_mod.init_caches(cfg, b, s, dtype=jnp.bfloat16,
+                                   kv_quant=kv_quant))
+
+
+def _metric_specs(mesh, tree):
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+                     impl: str = "ref", remat: str = "full",
+                     optimizer: str | None = None,
+                     accum_steps: int | None = None, unroll: bool = False,
+                     dtype=jnp.bfloat16) -> StepBundle:
+    giant = cfg.param_count_estimate() > GIANT_PARAMS
+    opt_name = optimizer or ("adamw_q8" if giant else "adamw")
+    if accum_steps is None:
+        # microbatching for the giants: activations scale with B/accum, and
+        # the backward of microbatch i overlaps the DP reduce of i-1
+        accum_steps = 8 if giant else 1
+    acc_dtype = jnp.bfloat16 if giant else jnp.float32
+    if unroll:
+        accum_steps = 1          # cost variants measure one full batch
+        remat = "none"
+    opt = make_optimizer(opt_name, lr=1e-4, weight_decay=0.01)
+    # parallelism selection (EXPERIMENTS.md §Perf iter 6): pure-FSDP beats
+    # TP+SP for <=30B trains whenever the batch covers every chip — no
+    # activation collectives, only per-layer param gathers
+    import numpy as _np
+    n_chips = int(_np.prod(list(dict(mesh.shape).values())))
+    parallelism = ("fsdp" if (not giant
+                              and shape.global_batch % n_chips == 0)
+                   else "tp")
+    policy = make_policy(cfg, mesh, parallelism=parallelism)
+    rt = make_runtime(cfg, mesh, shape, impl=impl, remat=remat,
+                      unroll=unroll)
+    rt = rt.replace(model_axis=policy.model_axis,
+                    data_axes=policy.data_axes)
+    loss_fn = ed.encdec_loss if cfg.enc_dec else lm_mod.lm_loss
+
+    def train_step(params, opt_state, batch):
+        def lf(p, b):
+            return loss_fn(p, b, cfg, rt)
+
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params, batch)
+        else:
+            def micro(acc, mb):
+                (l, m), g = jax.value_and_grad(lf, has_aux=True)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b2: a + b2.astype(acc_dtype), acc, g)
+                return acc, (l, m)
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            grads, (losses, ms) = jax.lax.scan(micro, zero, mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree_util.tree_map(jnp.mean, ms)
+
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, gnorm=gnorm)
+        return params, opt_state, metrics
+
+    params_sds = _params_sds(cfg, dtype, quantized=False)
+    opt_sds = jax.eval_shape(opt.init, params_sds)
+    batch_sds = _batch_sds(cfg, shape)
+
+    p_ns = policy.named(policy.param_specs(params_sds))
+    o_ns = policy.named(policy.opt_specs(params_sds, opt_sds))
+    b_spec = {k: NamedSharding(mesh, policy.batch_spec(v.shape[0],
+                                                       len(v.shape) - 1))
+              for k, v in batch_sds.items()}
+    metrics_sds = {"ce": 0.0, "loss": 0.0, "gnorm": 0.0}
+    if not cfg.enc_dec:
+        metrics_sds["aux"] = 0.0
+    metrics_sds["z"] = 0.0
+    m_ns = _metric_specs(mesh, metrics_sds)
+
+    args = (_sds_with_sharding(params_sds, p_ns),
+            _sds_with_sharding(opt_sds, o_ns),
+            _sds_with_sharding(batch_sds, b_spec))
+    return StepBundle(
+        fn=train_step, args=args,
+        in_shardings=(p_ns, o_ns, b_spec),
+        out_shardings=(p_ns, o_ns, m_ns),
+        donate_argnums=(0, 1),
+        meta={"kind": "train", "optimizer": opt_name, "fsdp": policy.fsdp,
+              "parallelism": parallelism, "remat": remat})
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill / decode
+# ---------------------------------------------------------------------------
+
+def build_serve_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+                     impl: str = "ref", quantized: bool = True,
+                     kv_quant: bool = False, unroll: bool = False,
+                     prefill_cp: bool | None = None,
+                     dtype=jnp.bfloat16) -> StepBundle:
+    rt = make_runtime(cfg, mesh, shape, impl=impl, unroll=unroll)
+    rt = rt.replace(kv_quant=kv_quant)
+    b, s = shape.global_batch, shape.seq_len
+    params_sds = _params_sds(cfg, dtype, quantized=quantized)
+    caches_sds = _caches_sds(cfg, b, s, kv_quant=kv_quant)
+
+    # context-parallel prefill (§Perf cell 2): sequence-sharded activations
+    # + FSDP (gathered) weights + KV-gather attention — replaces the TP/SP
+    # activation gathers. On by default where it applies (long prefill of
+    # non-giant archs whose dims divide the axes).
+    if prefill_cp is None:
+        prefill_cp = (shape.kind == "prefill"
+                      and cfg.param_count_estimate() <= 30e9
+                      and s % 16 == 0 and b % 16 == 0
+                      and not cfg.enc_dec)
+    if shape.kind == "prefill" and prefill_cp:
+        policy = make_policy(cfg, mesh, parallelism="replicated")
+        rt = rt.replace(attn_cp=True, model_axis="model",
+                        data_axes=tuple(a for a in ("pod", "data")
+                                        if a in dict(mesh.shape)))
+    else:
+        policy = make_policy(cfg, mesh)
+    p_ns = policy.named(policy.param_specs(params_sds))
+    c_ns = policy.named(policy.cache_specs(caches_sds))
+    logit_ns = NamedSharding(mesh, policy.batch_spec(b, 1))
+
+    if shape.kind == "prefill":
+        if cfg.enc_dec:
+            def step(params, frames, tokens, caches):
+                return ed.encdec_prefill(params, frames, tokens, caches, cfg,
+                                         rt)
+            frames_sds = jax.ShapeDtypeStruct(
+                (b, cfg.enc_seq_len, cfg.d_model), jnp.bfloat16)
+            f_ns = NamedSharding(mesh, policy.batch_spec(b, 2))
+            tok_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            t_ns = NamedSharding(mesh, policy.batch_spec(b, 1))
+            args = (_sds_with_sharding(params_sds, p_ns),
+                    jax.ShapeDtypeStruct(frames_sds.shape, frames_sds.dtype,
+                                         sharding=f_ns),
+                    jax.ShapeDtypeStruct(tok_sds.shape, tok_sds.dtype,
+                                         sharding=t_ns),
+                    _sds_with_sharding(caches_sds, c_ns))
+            return StepBundle(step, args,
+                              in_shardings=(p_ns, f_ns, t_ns, c_ns),
+                              out_shardings=(logit_ns, c_ns),
+                              donate_argnums=(3,),
+                              meta={"kind": "prefill", "quantized": quantized})
+
+        def step(params, tokens, caches):
+            extra = {}
+            if cfg.mrope_sections is not None:
+                bb, ss = tokens.shape
+                pos = jnp.broadcast_to(jnp.arange(ss, dtype=jnp.int32),
+                                       (bb, ss))
+                extra["positions"] = jnp.broadcast_to(pos[:, None, :],
+                                                      (bb, 3, ss))
+            return lm_mod.lm_prefill(params, tokens, caches, cfg, rt,
+                                     positions=extra.get("positions"))
+        tok_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        t_ns = NamedSharding(mesh, policy.batch_spec(b, 1))
+        args = (_sds_with_sharding(params_sds, p_ns),
+                jax.ShapeDtypeStruct(tok_sds.shape, tok_sds.dtype,
+                                     sharding=t_ns),
+                _sds_with_sharding(caches_sds, c_ns))
+        return StepBundle(step, args,
+                          in_shardings=(p_ns, t_ns, c_ns),
+                          out_shardings=(logit_ns, c_ns),
+                          donate_argnums=(2,),
+                          meta={"kind": "prefill", "quantized": quantized,
+                                "prefill_cp": prefill_cp})
+
+    # decode: one token against a seq_len cache
+    if cfg.enc_dec:
+        def step(params, token, pos, caches):
+            return ed.encdec_decode_step(params, token, pos, caches, cfg, rt)
+    else:
+        def step(params, token, pos, caches):
+            return lm_mod.lm_decode_step(params, token, pos, caches, cfg, rt)
+    tok_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    t_ns = NamedSharding(mesh, policy.batch_spec(b, 0))
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_ns = NamedSharding(mesh, P())
+    args = (_sds_with_sharding(params_sds, p_ns),
+            jax.ShapeDtypeStruct(tok_sds.shape, tok_sds.dtype, sharding=t_ns),
+            jax.ShapeDtypeStruct(pos_sds.shape, pos_sds.dtype,
+                                 sharding=pos_ns),
+            _sds_with_sharding(caches_sds, c_ns))
+    return StepBundle(step, args,
+                      in_shardings=(p_ns, t_ns, pos_ns, c_ns),
+                      out_shardings=(logit_ns, c_ns),
+                      donate_argnums=(3,),
+                      meta={"kind": "decode", "quantized": quantized,
+                            "kv_quant": kv_quant})
+
+
+def build_step(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               **kw) -> StepBundle:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, **kw)
+    return build_serve_step(cfg, shape, mesh, **kw)

@@ -1,0 +1,6 @@
+from .lm import (init_caches, lm_decode_step, lm_init, lm_logits, lm_loss,
+                 lm_prefill)
+from .encdec import (encdec_decode_step, encdec_encode, encdec_init,
+                     encdec_init_caches, encdec_loss, encdec_prefill)
+from .mlp_mnist import (paper_mlp_apply, paper_mlp_init, paper_mlp_loss,
+                        paper_mlp_predict, mlp_net_apply, mlp_net_init)

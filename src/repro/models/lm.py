@@ -1,0 +1,182 @@
+"""Decoder-only language model: init / train loss / prefill / decode.
+
+Covers dense (granite, gemma, qwen2.5, minitron), MoE (kimi-k2, olmoe),
+SSM (xlstm), hybrid (jamba) and VLM-backbone (qwen2-vl, M-RoPE) families —
+everything except enc-dec (see encdec.py). The vocabulary head is evaluated
+in sequence chunks (never materializing (B, S, V)); the head weight shards
+over the model axis when the vocab divides it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.nn.layers import (Runtime, dense_apply, dense_init,
+                             embedding_apply, embedding_init, norm_apply,
+                             norm_init)
+from repro.nn.transformer import (slot_init_cache, stack_apply, stack_decode,
+                                  stack_prefill, stack_init)
+
+__all__ = ["lm_init", "lm_loss", "lm_logits", "lm_prefill", "lm_decode_step",
+           "init_caches", "chunked_ce"]
+
+LOSS_CHUNK = 256
+AUX_WEIGHT = 0.01
+Z_WEIGHT = 1e-4
+
+
+def lm_init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "embed": embedding_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                dtype=dtype),
+        "stack": stack_init(ks[1], cfg, dtype=dtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size,
+                               dtype=dtype)
+    return p
+
+
+def _head_w(params: dict, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T          # (D, V)
+    return params["head"]["w"]
+
+
+def _default_positions(cfg: ArchConfig, b: int, s: int):
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(pos[:, None, :], (b, 3, s))
+    return pos
+
+
+def chunked_ce(h: jax.Array, w_head: jax.Array, labels: jax.Array, *,
+               chunk: int = LOSS_CHUNK, rt: Runtime | None = None,
+               unroll: bool = False):
+    """Mean token cross-entropy, scanning over sequence chunks so the
+    (B, chunk, V) logits block is the only vocab-sized live tensor.
+    Also returns z-loss (log^2 Z) for stability."""
+    b, s, d = h.shape
+    v = w_head.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    n_chunks = s // chunk
+    w32 = w_head.astype(jnp.bfloat16)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, i):
+        # checkpointed: the (B, chunk, V) logits block is recomputed in the
+        # backward instead of being saved once per chunk (one cheap matmul)
+        ce_sum, z_sum = carry
+        h_i = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+        y_i = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        logits = jnp.dot(h_i.astype(jnp.bfloat16), w32,
+                         preferred_element_type=jnp.float32)
+        if rt is not None and rt.mesh is not None \
+                and rt.model_axis is not None \
+                and v % rt.mesh.shape[rt.model_axis] == 0:
+            from jax.sharding import NamedSharding
+            dp = rt.data_axes if rt.data_axes else None
+            logits = jax.lax.with_sharding_constraint(
+                logits, NamedSharding(rt.mesh, P(dp, None, rt.model_axis)))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        true = jnp.take_along_axis(logits, y_i[..., None],
+                                   axis=-1)[..., 0]
+        ce_sum = ce_sum + jnp.sum(lse - true)
+        z_sum = z_sum + jnp.sum(lse * lse)
+        return (ce_sum, z_sum), None
+
+    if n_chunks == 1:
+        (ce, z), _ = body((jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32)), 0)
+    else:
+        (ce, z), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            jnp.arange(n_chunks), unroll=True if unroll else 1)
+    n_tok = b * s
+    return ce / n_tok, z / n_tok
+
+
+def _backbone(params, cfg: ArchConfig, tokens, positions, rt: Runtime,
+              embeds=None):
+    x = embeds if embeds is not None else embedding_apply(params["embed"],
+                                                          tokens)
+    # sequence-sharded from the embedding on (SP/CP); batch over data axes
+    from repro.nn.transformer import _sp_constrain
+    x = _sp_constrain(x, rt)
+    h, aux = stack_apply(params["stack"], x, positions, cfg, rt)
+    return norm_apply(cfg.norm, params["final_norm"], h), aux
+
+
+def lm_loss(params, batch: dict, cfg: ArchConfig, rt: Runtime):
+    """batch: {'tokens': (B,S) int32, 'labels': (B,S) int32,
+    optional 'positions'}. Returns (scalar loss, metrics dict)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    h, aux = _backbone(params, cfg, tokens, positions, rt,
+                       embeds=batch.get("embeds"))
+    ce, z = chunked_ce(h, _head_w(params, cfg), batch["labels"], rt=rt,
+                       unroll=rt.unroll)
+    loss = ce + AUX_WEIGHT * aux + Z_WEIGHT * z
+    return loss, {"ce": ce, "aux": aux, "z": z}
+
+
+def lm_logits(params, tokens, cfg: ArchConfig, rt: Runtime, positions=None,
+              embeds=None):
+    """Full-sequence logits (small-model/test use only)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    h, _ = _backbone(params, cfg, tokens, positions, rt, embeds=embeds)
+    return jnp.dot(h, _head_w(params, cfg).astype(h.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16, kv_quant: bool = False):
+    return [slot_init_cache(slot, cfg, batch, max_seq, dtype,
+                            kv_quant=kv_quant)
+            for slot in cfg.pattern]
+
+
+def lm_prefill(params, tokens, caches, cfg: ArchConfig, rt: Runtime,
+               positions=None, embeds=None):
+    """Run the prompt through the stack, fill caches, return last-position
+    logits and the caches."""
+    b, s = tokens.shape[:2]
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    x = embeds if embeds is not None else embedding_apply(params["embed"],
+                                                          tokens)
+    from repro.nn.transformer import _sp_constrain
+    x = _sp_constrain(x, rt)
+    h, new_caches, _ = stack_prefill(params["stack"], x, positions, cfg, rt,
+                                     caches)
+    h = norm_apply(cfg.norm, params["final_norm"], h[:, -1:])
+    logits = jnp.dot(h[:, 0], _head_w(params, cfg).astype(h.dtype))
+    return logits, new_caches
+
+
+def lm_decode_step(params, token, pos, caches, cfg: ArchConfig, rt: Runtime):
+    """One decode step. token: (B,) int32; pos: () int32 (current write
+    position = number of tokens already in cache). Returns (logits (B, V),
+    new_caches)."""
+    x = embedding_apply(params["embed"], token[:, None])
+    h, new_caches = stack_decode(params["stack"], x, pos, cfg, rt, caches)
+    h = norm_apply(cfg.norm, params["final_norm"], h)
+    logits = jnp.dot(h[:, 0], _head_w(params, cfg).astype(h.dtype))
+    return logits, new_caches

@@ -1,0 +1,64 @@
+"""The paper's own model (§4.1): a 3-layer MLP, 784-128-10, sigmoid
+activations, MSE loss against one-hot targets, trained with plain SGD
+(B=64, eta=0.5). Faithful reproduction — the generic ``mlp_net`` variant is
+also the Q-function approximator for the §4.2 RL experiment.
+
+Inference can run through the dense path or the SPx-quantized pipelined
+path (quantize_params + kernels.ops.spx_matmul) — the comparison between
+them is the paper's Table-1/quantization experiment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import Runtime, dense_apply, dense_init
+
+__all__ = ["PAPER_LAYERS", "mlp_net_init", "mlp_net_apply", "paper_mlp_init",
+           "paper_mlp_apply", "paper_mlp_loss", "paper_mlp_predict"]
+
+PAPER_LAYERS = (784, 128, 10)
+
+
+def mlp_net_init(key, sizes, *, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, len(sizes) - 1)
+    return {f"l{i}": dense_init(ks[i], sizes[i], sizes[i + 1], bias=True,
+                                dtype=dtype)
+            for i in range(len(sizes) - 1)}
+
+
+def mlp_net_apply(params: dict, x: jax.Array, *, act=jax.nn.sigmoid,
+                  final_act=None, rt: Runtime | None = None) -> jax.Array:
+    n = len(params)
+    for i in range(n):
+        x = dense_apply(params[f"l{i}"], x, rt)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def paper_mlp_init(key, dtype=jnp.float32) -> dict:
+    return mlp_net_init(key, PAPER_LAYERS, dtype=dtype)
+
+
+def paper_mlp_apply(params: dict, x: jax.Array,
+                    rt: Runtime | None = None) -> jax.Array:
+    """Eq. 4.2: F(x) = sigmoid(W3 sigmoid(W2 x + b2) + b3). x: (B, 784)."""
+    return mlp_net_apply(params, x, act=jax.nn.sigmoid,
+                         final_act=jax.nn.sigmoid, rt=rt)
+
+
+def paper_mlp_loss(params: dict, x: jax.Array, y: jax.Array,
+                   rt: Runtime | None = None) -> jax.Array:
+    """Eq. 4.5: mean squared error against one-hot labels."""
+    out = paper_mlp_apply(params, x, rt)
+    onehot = jax.nn.one_hot(y, 10, dtype=out.dtype)
+    return jnp.mean(jnp.sum((out - onehot) ** 2, axis=-1))
+
+
+def paper_mlp_predict(params: dict, x: jax.Array,
+                      rt: Runtime | None = None) -> jax.Array:
+    """Eq. 4.3: argmax over the 10 output components."""
+    return jnp.argmax(paper_mlp_apply(params, x, rt), axis=-1)

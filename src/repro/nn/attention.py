@@ -1,0 +1,410 @@
+"""GQA attention: training/prefill (chunked online attention or Pallas flash
+kernel) and decode (context-parallel flash-decode over a sequence-sharded KV
+cache via shard_map).
+
+Distribution notes
+------------------
+* Prefill/train: batch shards over data axes; the head dim of intermediates
+  is constrained over the model axis (GSPMD pads uneven head counts — jit
+  *inputs* are never unevenly sharded).
+* Decode: the KV cache is a jit input, so its sharding must be even. KV head
+  counts (1..16) generally aren't divisible by the 16-wide model axis, so the
+  cache shards over the *sequence* dim instead, and attention runs as
+  flash-decode context parallelism inside shard_map: each model-axis shard
+  computes a local online-softmax partial + LSE stats; one tiny psum merges.
+  The token's cache update lands in exactly one shard (clamped single-slot
+  dynamic-update-slice — no collective, no full-cache copy).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+from .layers import Runtime, dense_apply, dense_init
+from .rotary import apply_mrope, apply_rope
+
+__all__ = ["attn_init", "attn_apply_dense", "attention_core",
+           "decode_attention", "attn_decode_step"]
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+              head_dim: int, *, qkv_bias: bool = False,
+              dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, bias=qkv_bias,
+                         dtype=dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * head_dim, bias=qkv_bias,
+                         dtype=dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * head_dim, bias=qkv_bias,
+                         dtype=dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype=dtype),
+    }
+
+
+def _project_qkv(p, x, n_heads, n_kv_heads, head_dim, rt):
+    b, s, _ = x.shape
+    q = dense_apply(p["wq"], x, rt).reshape(b, s, n_heads, head_dim)
+    k = dense_apply(p["wk"], x, rt).reshape(b, s, n_kv_heads, head_dim)
+    v = dense_apply(p["wv"], x, rt).reshape(b, s, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def _apply_positional(q, k, positions, rope_theta, mrope_sections):
+    if mrope_sections is not None:
+        # positions: (B, 3, S)
+        q = apply_mrope(q, positions, sections=mrope_sections,
+                        theta=rope_theta)
+        k = apply_mrope(k, positions, sections=mrope_sections,
+                        theta=rope_theta)
+    else:
+        q = apply_rope(q, positions, theta=rope_theta)
+        k = apply_rope(k, positions, theta=rope_theta)
+    return q, k
+
+
+# ---------------------------------------------------------------------------
+# Core attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _chunked_attention(q, k, v, *, causal: bool, q_chunk: int,
+                       unroll: bool = False, q_offset=0):
+    """Memory-bounded attention: scan over query chunks; each chunk attends
+    to the full key range with absolute-position causal masking. Scores are
+    (B, H, cq, Skv) per step — never (S, S) — and only the per-chunk scores
+    are f32; K/V stay bf16 and 4-D so the head dim keeps its model-axis
+    sharding (no batch*head merge, which would force all-gathers). Pure jnp
+    (CPU / dry-run path); the TPU path is the Pallas flash kernel."""
+    b, h, sq, dh = q.shape
+    skv = k.shape[2]
+    cq = min(q_chunk, sq)
+    if sq % cq:
+        cq = sq  # ragged: single chunk (callers pass pow2 seqs)
+    n_chunks = sq // cq
+    scale = dh ** -0.5
+    kv_pos = jnp.arange(skv)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk(carry, i):
+        # checkpointed: the (B, H, cq, Skv) probs are recomputed in the
+        # backward (flash-attention-style) instead of being stacked across
+        # the chunk scan — that stack is quadratic in S.
+        q_i = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=2)
+        s = jax.lax.dot_general(
+            q_i, k, (((3,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32) * scale    # (B,H,cq,Skv)
+        if causal:
+            q_pos = q_offset + i * cq + jnp.arange(cq)
+            s = jnp.where(q_pos[:, None] >= kv_pos[None, :], s, _NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)            # (B,H,cq,dh)
+        return carry, o.astype(q.dtype)
+
+    if n_chunks == 1:
+        _, o = chunk(None, 0)
+        return o
+    _, outs = jax.lax.scan(chunk, None, jnp.arange(n_chunks),
+                           unroll=True if unroll else 1)
+    # outs: (nc, B, H, cq, dh) -> (B, H, Sq, dh)
+    outs = jnp.moveaxis(outs, 0, 2)
+    return outs.reshape(b, h, sq, dh)
+
+
+def attention_core(q, k, v, *, causal: bool, rt: Runtime):
+    """q: (B, Hq, Sq, dh); k, v: (B, Hkv, Skv, dh) -> (B, Hq, Sq, dh)."""
+    if getattr(rt, "attn_cp", False) and rt.mesh is not None \
+            and q.shape[2] % dict(rt.mesh.shape)[rt.model_axis] == 0 \
+            and q.shape[2] == k.shape[2]:
+        return _attention_core_cp(q, k, v, causal=causal, rt=rt)
+    impl = ops.resolve_impl(rt.impl)
+    if impl in ("pallas", "interpret"):
+        return ops.flash_attention(q, k, v, causal=causal, impl=impl)
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)   # bf16, head dim stays sharded
+        v = jnp.repeat(v, rep, axis=1)
+    return _chunked_attention(q, k, v, causal=causal, q_chunk=rt.q_chunk,
+                              unroll=rt.unroll)
+
+
+def _attention_core_cp(q, k, v, *, causal: bool, rt: Runtime):
+    """Context-parallel attention (long-prefill path, §Perf cell 2):
+    queries stay sequence-sharded over the model axis; each shard gathers
+    only the (small, GQA) K/V and computes its causal rows locally. Per
+    layer this moves S*Hkv*dh*2 bytes instead of the 3+ full-activation
+    (S x d_model) gathers the TP/SP path needs — the difference between
+    collective-bound and compute-bound 32k prefill."""
+    axis = rt.model_axis
+    n = dict(rt.mesh.shape)[axis]
+    b, hq, sq, dh = q.shape
+    s_loc = sq // n
+    dp = rt.data_axes if rt.data_axes else None
+
+    def local(q_l, k_g, v_g):
+        # q_l: (B, Hq, S/n, dh); k_g/v_g: (B, Hkv, S, dh) replicated
+        off = jax.lax.axis_index(axis) * s_loc
+        rep = hq // k_g.shape[1]
+        if rep > 1:
+            k_g = jnp.repeat(k_g, rep, axis=1)
+            v_g = jnp.repeat(v_g, rep, axis=1)
+        return _chunked_attention(q_l, k_g, v_g, causal=causal,
+                                  q_chunk=min(rt.q_chunk, s_loc),
+                                  unroll=rt.unroll, q_offset=off)
+
+    fn = jax.shard_map(
+        local, mesh=rt.mesh,
+        in_specs=(P(dp, None, axis, None), P(dp, None, None, None),
+                  P(dp, None, None, None)),
+        out_specs=P(dp, None, axis, None),
+        check_vma=False)
+    return fn(q, k, v)
+
+
+def attn_apply_dense(p: dict, x: jax.Array, positions: jax.Array, *,
+                     n_heads: int, n_kv_heads: int, head_dim: int,
+                     causal: bool = True, rope_theta: float = 10000.0,
+                     mrope_sections=None, rt: Runtime,
+                     kv_out: bool = False,
+                     cross_kv: tuple | None = None):
+    """Full attention sublayer (projections + rope + core + output proj).
+
+    cross_kv: optional (k, v) tuple — used by the enc-dec decoder's
+    cross-attention (no rope on kv, not causal).
+    Returns y or (y, (k, v)) if kv_out.
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, rt)
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = apply_rope(q, positions, theta=rope_theta) if mrope_sections is None else q
+    elif positions is not None:
+        q, k = _apply_positional(q, k, positions, rope_theta, mrope_sections)
+
+    # sharding hints: TP mode shards heads over model (padded if uneven);
+    # CP mode keeps q sequence-sharded (the KV gather happens in shard_map)
+    if rt.mesh is not None and rt.model_axis is not None:
+        from jax.sharding import NamedSharding
+        dp = rt.data_axes if rt.data_axes else None
+        if getattr(rt, "attn_cp", False):
+            # CP: q/k/v all stay sequence-sharded through the projections
+            # (compute stays 1/n per chip); the attention shard_map's
+            # in_spec gathers only K/V at entry. Constraining k/v
+            # "replicated" here instead makes GSPMD hoist the gather
+            # before the projections — 16x replicated QKV/MLP compute
+            # (measured: §Perf cell 2 iter 1).
+            seq_spec = NamedSharding(rt.mesh, P(dp, rt.model_axis, None,
+                                                None))
+            q = jax.lax.with_sharding_constraint(q, seq_spec)
+            k = jax.lax.with_sharding_constraint(k, seq_spec)
+            v = jax.lax.with_sharding_constraint(v, seq_spec)
+        else:
+            q = jax.lax.with_sharding_constraint(
+                q, NamedSharding(rt.mesh, P(dp, None, rt.model_axis, None)))
+            k = jax.lax.with_sharding_constraint(
+                k, NamedSharding(rt.mesh, P(dp, None, None, None)))
+            v = jax.lax.with_sharding_constraint(
+                v, NamedSharding(rt.mesh, P(dp, None, None, None)))
+
+    qh = jnp.swapaxes(q, 1, 2)          # (B, Hq, S, dh)
+    kh = jnp.swapaxes(k, 1, 2)
+    vh = jnp.swapaxes(v, 1, 2)
+    o = attention_core(qh, kh, vh, causal=causal and cross_kv is None, rt=rt)
+    o = jnp.swapaxes(o, 1, 2).reshape(b, s, n_heads * head_dim)
+    y = dense_apply(p["wo"], o, rt)
+    if kv_out:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode: context-parallel flash-decode over a seq-sharded KV cache
+# ---------------------------------------------------------------------------
+
+def quantize_kv(x, axis=-1):
+    """Symmetric int8 (SPx uniform8) per-position quantization of K/V.
+    x: (..., dh) -> (codes int8, scale f32 (..., 1))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                    keepdims=True)
+    scale = jnp.maximum(scale, 1e-8)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale * 127.0),
+                     -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def _local_flash_decode(q, k_cache, v_cache, k_new, v_new, pos, *,
+                        shard_size: int, axis: str | None):
+    """Per-shard decode body. Shapes (local view):
+      q: (B, Hq, dh); caches: (B, Hkv, S_loc, dh) arrays, OR dicts
+      {"codes" int8 (B,Hkv,S_loc,dh), "scale" f32 (B,Hkv,S_loc,1)} for the
+      SPx-int8-quantized cache (halves the decode step's HBM-bound term —
+      EXPERIMENTS.md §Perf cell 1); k_new/v_new: (B, Hkv, dh);
+      pos: (B,) int32 — per-sequence global write/attend position
+      (continuous batching: slots decode at different depths).
+    Returns (out (B, Hq, dh), k_cache, v_cache) updated.
+    """
+    quantized = isinstance(k_cache, dict)
+    b, hq, dh = q.shape
+    hkv = (k_cache["codes"] if quantized else k_cache).shape[1]
+    s_loc = (k_cache["codes"] if quantized else k_cache).shape[2]
+    rep = hq // hkv
+
+    shard_idx = jax.lax.axis_index(axis) if axis else 0
+    local_start = shard_idx * shard_size
+    local_pos = pos - local_start                    # (B,)
+    in_range = (local_pos >= 0) & (local_pos < s_loc)
+    idx = jnp.clip(local_pos, 0, s_loc - 1)
+
+    # per-row single-slot masked write: read old slot, select, write back
+    def upd(cache, new):
+        def row(c_b, n_b, ix, ok):
+            old = jax.lax.dynamic_slice_in_dim(c_b, ix, 1, axis=1)
+            val = jnp.where(ok, n_b[:, None, :].astype(c_b.dtype), old)
+            return jax.lax.dynamic_update_slice_in_dim(c_b, val, ix, axis=1)
+        return jax.vmap(row)(cache, new, idx, in_range)
+
+    if quantized:
+        kc_new, ks_new = quantize_kv(k_new)            # (B,Hkv,dh),(B,Hkv,1)
+        vc_new, vs_new = quantize_kv(v_new)
+        k_cache = {"codes": upd(k_cache["codes"], kc_new),
+                   "scale": upd(k_cache["scale"], ks_new)}
+        v_cache = {"codes": upd(v_cache["codes"], vc_new),
+                   "scale": upd(v_cache["scale"], vs_new)}
+        # scores: q . (codes * scale/127) == (q . codes) * scale/127
+        kr = jnp.repeat(k_cache["codes"], rep, axis=1)     # int8
+        ksc = jnp.repeat(k_cache["scale"], rep, axis=1)    # (B,Hq,S,1)
+        s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                       kr.astype(jnp.float32))
+        s = s * (ksc[..., 0] / 127.0) * (dh ** -0.5)
+    else:
+        k_cache = upd(k_cache, k_new)
+        v_cache = upd(v_cache, v_new)
+        kr = jnp.repeat(k_cache, rep, axis=1)   # (B, Hq, S_loc, dh)
+        s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                       kr.astype(jnp.float32)) * (dh ** -0.5)
+
+    gpos = local_start + jnp.arange(s_loc)
+    s = jnp.where(gpos[None, None, :] <= pos[:, None, None], s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)                 # (B, Hq, 1)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    if quantized:
+        vr = jnp.repeat(v_cache["codes"], rep, axis=1)
+        vsc = jnp.repeat(v_cache["scale"], rep, axis=1)
+        # fold the per-position V scale into p before the int8 einsum
+        pv = p * (vsc[..., 0] / 127.0)
+        o = jnp.einsum("bhk,bhkd->bhd", pv, vr.astype(jnp.float32))
+    else:
+        vr = jnp.repeat(v_cache, rep, axis=1)
+        o = jnp.einsum("bhk,bhkd->bhd", p, vr.astype(jnp.float32))
+
+    if axis is not None:
+        # LSE merge across shards (tiny collectives: (B,Hq,1) and (B,Hq,dh))
+        m_g = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axis)
+        o = jax.lax.psum(o * corr, axis)
+        out = o / jnp.maximum(l_g, 1e-30)
+    else:
+        out = o / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype), k_cache, v_cache
+
+
+def decode_attention(q, k_cache, v_cache, k_new, v_new, pos, *, rt: Runtime):
+    """One-token attention against the cache, updating it.
+
+    q: (B, Hq, dh); caches (B, Hkv, S, dh) [seq-sharded over rt.decode_seq_axis
+    when a mesh is active]; k_new/v_new: (B, Hkv, dh); pos: () or (B,) int32
+    (per-sequence positions for continuous batching).
+    Returns (out, k_cache, v_cache).
+    """
+    quantized = isinstance(k_cache, dict)
+    s_total = (k_cache["codes"] if quantized else k_cache).shape[2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (q.shape[0],))
+    if rt.mesh is None or rt.decode_seq_axis is None:
+        return _local_flash_decode(q, k_cache, v_cache, k_new, v_new, pos,
+                                   shard_size=s_total, axis=None)
+
+    axis = rt.decode_seq_axis
+    n_shards = rt.mesh.shape[axis]
+    if s_total % n_shards or (rt.data_axes and
+                              q.shape[0] % _n_axes(rt.mesh, rt.data_axes)):
+        # non-divisible (tiny test shapes): local path, replicated
+        return _local_flash_decode(q, k_cache, v_cache, k_new, v_new, pos,
+                                   shard_size=s_total, axis=None)
+    shard_size = s_total // n_shards
+    dp = rt.data_axes if rt.data_axes else None
+    arr_spec = P(dp, None, axis, None)
+    cache_spec = ({"codes": arr_spec, "scale": arr_spec} if quantized
+                  else arr_spec)
+    rep_spec = P(dp, None, None)
+
+    fn = jax.shard_map(
+        functools.partial(_local_flash_decode, shard_size=shard_size,
+                          axis=axis),
+        mesh=rt.mesh,
+        in_specs=(rep_spec, cache_spec, cache_spec, rep_spec, rep_spec,
+                  P(dp)),
+        out_specs=(rep_spec, cache_spec, cache_spec),
+        check_vma=False,
+    )
+    return fn(q, k_cache, v_cache, k_new, v_new, pos)
+
+
+def _n_axes(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= dict(mesh.shape)[a]
+    return n
+
+
+def attn_decode_step(p: dict, x: jax.Array, pos: jax.Array, kv_cache: tuple, *,
+                     n_heads: int, n_kv_heads: int, head_dim: int,
+                     rope_theta: float = 10000.0, mrope_sections=None,
+                     rt: Runtime, cross_kv: tuple | None = None):
+    """One-token attention sublayer. x: (B, 1, D); kv_cache: (k, v) each
+    (B, Hkv, S, dh). Returns (y (B,1,D), new_cache)."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, rt)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    if mrope_sections is not None:
+        positions3 = jnp.broadcast_to(pos_b[:, None, None], (b, 3, 1))
+        q, k = _apply_positional(q, k, positions3, rope_theta, mrope_sections)
+    else:
+        q, k = _apply_positional(q, k, pos_b[:, None], rope_theta,
+                                 mrope_sections)
+
+    if cross_kv is not None:
+        # cross-attention: static KV (encoder output projections), no cache
+        kh = jnp.swapaxes(cross_kv[0], 1, 2)
+        vh = jnp.swapaxes(cross_kv[1], 1, 2)
+        qh = jnp.swapaxes(q, 1, 2)
+        o = attention_core(qh, kh, vh, causal=False, rt=rt)
+        y = jnp.swapaxes(o, 1, 2).reshape(b, 1, n_heads * head_dim)
+        return dense_apply(p["wo"], y, rt), kv_cache
+
+    k_cache, v_cache = kv_cache
+    out, k_cache, v_cache = decode_attention(
+        q[:, 0].reshape(b, n_heads, head_dim),
+        k_cache, v_cache,
+        k[:, 0].reshape(b, n_kv_heads, head_dim),
+        v[:, 0].reshape(b, n_kv_heads, head_dim),
+        pos, rt=rt)
+    y = dense_apply(p["wo"], out.reshape(b, 1, n_heads * head_dim), rt)
+    return y, (k_cache, v_cache)

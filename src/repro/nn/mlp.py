@@ -1,0 +1,46 @@
+"""Feed-forward variants used across the assigned architectures:
+  * "mlp"     — plain up/act/down (whisper: gelu; paper MLP: sigmoid)
+  * "swiglu"  — gated silu (granite, qwen2.5, kimi/olmoe/jamba experts)
+  * "geglu"   — gated gelu (gemma)
+  * "relu2"   — squared relu, ungated (minitron/nemotron)
+All large projections may be SPx-quantized (QuantizedTensor weights)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Runtime, dense_apply, dense_init
+
+__all__ = ["mlp_init", "mlp_apply", "ACTIVATIONS"]
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+}
+
+_GATED = {"swiglu": "silu", "geglu": "gelu"}
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, variant: str = "swiglu",
+             act: str = "gelu", bias: bool = False, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, bias=bias, dtype=dtype),
+         "down": dense_init(ks[1], d_ff, d_model, bias=bias, dtype=dtype)}
+    if variant in _GATED:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, bias=bias, dtype=dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, *, variant: str = "swiglu",
+              act: str = "gelu", rt: Runtime | None = None) -> jax.Array:
+    up = dense_apply(p["up"], x, rt)
+    if variant in _GATED:
+        g = dense_apply(p["gate"], x, rt)
+        h = ACTIVATIONS[_GATED[variant]](g) * up
+    else:
+        h = ACTIVATIONS[act](up)
+    return dense_apply(p["down"], h, rt)

@@ -1,0 +1,55 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE splits the head_dim rotation frequencies into (temporal, height,
+width) sections, each rotated by its own position stream. For the text-only
+backbone (vision tower stubbed per the assignment) the three streams are
+equal, which degenerates to RoPE exactly — implemented generally so real
+(t, h, w) ids plug straight in.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope_frequencies", "apply_rope", "apply_mrope"]
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, dh); positions: (B, S) int32. Rotates pairs split at
+    dh/2 (HF convention)."""
+    dh = x.shape[-1]
+    inv = rope_frequencies(dh, theta)                      # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (B, S, dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]                      # (B, S, 1, dh/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, *,
+                sections: tuple[int, int, int], theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, dh); positions: (B, 3, S) for (t, h, w) streams;
+    sections: frequency counts per stream summing to dh/2."""
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    inv = rope_frequencies(dh, theta)                      # (dh/2,)
+    # pick the position stream per frequency section: (B, dh/2, S)
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=dh // 2)       # (dh/2,)
+    pos = positions.astype(jnp.float32)[:, sec_id, :]
+    # pos: (B, dh/2, S) -> angles (B, S, dh/2)
+    ang = jnp.swapaxes(pos, 1, 2) * inv[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)

@@ -1,0 +1,144 @@
+"""Batched serving engine: continuous-batching slots over the compiled
+prefill/decode steps, with SPx-quantized weights (the paper's deployment
+mode). Single-host execution here; the distributed dry-run exercises the
+same step functions on the production meshes.
+
+Requests enter a queue; the engine packs up to ``batch_slots`` active
+sequences, prefills new arrivals (padded to the slot length), then decodes
+in lockstep — one logits row per active slot per step, greedy or
+temperature sampling. Finished sequences release their slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm as lm_mod
+from repro.nn.layers import Runtime, quantize_params
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (len,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig, *, batch_slots: int = 4,
+                 max_seq: int = 256, quantize: str | None = "sp2_4",
+                 rt: Runtime | None = None, seed: int = 0):
+        self.cfg = cfg
+        self.rt = rt or Runtime(impl="auto", q_chunk=256)
+        self.batch_slots = batch_slots
+        self.max_seq = max_seq
+        if quantize:
+            params = quantize_params(params, quantize)
+        self.params = params
+        self._key = jax.random.PRNGKey(seed)
+
+        self._decode = jax.jit(
+            lambda p, tok, pos, caches: lm_mod.lm_decode_step(
+                p, tok, pos, caches, cfg, self.rt),
+            donate_argnums=(3,))
+        # per-slot position prefill: tokens padded to max_prompt, true
+        # lengths masked; logits of the last real token are picked host-side
+        self._prefill_one = jax.jit(
+            lambda p, tok, caches: lm_mod.lm_prefill(p, tok, caches, cfg,
+                                                     self.rt))
+        self.caches = lm_mod.init_caches(cfg, batch_slots, max_seq,
+                                         dtype=jnp.float32)
+        self.slot_req: list[Optional[Request]] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int64)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    # -- public API ----------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.t_enqueue = time.time()
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000):
+        """Drive until queue + slots drain (or step limit)."""
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self._admit()
+            self._decode_step()
+        return self.finished
+
+    # -- internals -------------------------------------------------------------
+
+    def _admit(self):
+        for slot in range(self.batch_slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[slot] = req
+                # prefill this slot: run prompt through a single-row batch,
+                # then splice its caches into the engine batch at `slot`
+                tok = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                row_caches = lm_mod.init_caches(self.cfg, 1, self.max_seq,
+                                                dtype=jnp.float32)
+                logits, row_caches = self._prefill_one(self.params, tok,
+                                                       row_caches)
+                self.caches = _splice_caches(self.caches, row_caches, slot)
+                self.slot_pos[slot] = len(req.prompt)
+                first = self._pick_token(logits[0], req)
+                req.output.append(int(first))
+                req.t_first_token = time.time()
+
+    def _decode_step(self):
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        tokens = np.zeros(self.batch_slots, np.int32)
+        for i in active:
+            tokens[i] = self.slot_req[i].output[-1]
+        # continuous batching: each slot decodes at its own position
+        pos = jnp.asarray(self.slot_pos, jnp.int32)
+        logits, self.caches = self._decode(self.params,
+                                           jnp.asarray(tokens),
+                                           pos, self.caches)
+        logits = np.asarray(logits)
+        for i in active:
+            req = self.slot_req[i]
+            tok = self._pick_token(logits[i], req)
+            req.output.append(int(tok))
+            self.slot_pos[i] += 1
+            if (len(req.output) >= req.max_new_tokens
+                    or self.slot_pos[i] >= self.max_seq - 1):
+                req.done = True
+                req.t_done = time.time()
+                self.finished.append(req)
+                self.slot_req[i] = None
+
+    def _pick_token(self, row: np.ndarray, req: Request) -> int:
+        if req.temperature <= 0:
+            return int(np.argmax(row))
+        self._key, sub = jax.random.split(self._key)
+        return int(jax.random.categorical(sub, jnp.asarray(row)
+                                          / req.temperature))
+
+
+def _splice_caches(batch_caches, row_caches, slot: int):
+    """Insert a prefilled single-row cache at batch index ``slot``. Cache
+    leaves have layout (P, B, ...)."""
+    def splice(bc, rc):
+        return bc.at[:, slot:slot + 1].set(rc)
+    return jax.tree_util.tree_map(splice, batch_caches, row_caches)

@@ -1,0 +1,6 @@
+from .optimizer import Optimizer, clip_by_global_norm, global_norm, make_optimizer
+from .checkpoint import (latest_step, list_checkpoints, restore_checkpoint,
+                         save_checkpoint)
+from .compression import GradCompressor
+from .train_loop import (StallDetected, StepWatchdog, TrainConfig, TrainLoop,
+                         make_grad_accum_step)

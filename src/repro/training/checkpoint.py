@@ -1,0 +1,134 @@
+"""Mesh-agnostic checkpointing with atomic commits and elastic restore.
+
+Layout: <dir>/step_<N>/
+  manifest.json          — step, leaf index (path -> file, shape, dtype), rng
+  leaf_<i>.npy           — one file per pytree leaf, saved UNSHARDED
+  _COMMITTED             — written last (atomic rename of tmpdir -> final)
+
+Because leaves are stored logically unsharded, a checkpoint written on a
+16x16 mesh restores onto 2x16x16 (or a single CPU device) untouched — this
+is the elastic-rescale path: kill the job, change the mesh, resume.
+numpy-only (no orbax offline), safe against partial writes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "list_checkpoints"]
+
+_COMMIT = "_COMMITTED"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
+                    extra: dict | None = None, keep: int = 3) -> str:
+    """Write atomically; prune to the newest ``keep`` checkpoints."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_step_{step}_")
+    index = []
+    try:
+        for i, (p, leaf) in enumerate(zip(paths, leaves)):
+            arr = np.asarray(jax.device_get(leaf))
+            dtype_str = str(arr.dtype)
+            if arr.dtype.kind not in "fiub" or dtype_str == "bfloat16":
+                # numpy can't round-trip extension dtypes (bfloat16, fp8)
+                # through .npy — store as f32 (lossless widening), restore
+                # casts back to the template dtype
+                arr = arr.astype(np.float32)
+            fname = f"leaf_{i}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            index.append({"path": p, "file": fname,
+                          "shape": list(arr.shape), "dtype": dtype_str})
+        manifest = {"step": step, "index": index, "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, _COMMIT), "w") as f:
+            f.write("ok")
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _prune(ckpt_dir, keep)
+    return final
+
+
+def _prune(ckpt_dir: str, keep: int):
+    steps = sorted(list_checkpoints(ckpt_dir))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"),
+                      ignore_errors=True)
+
+
+def list_checkpoints(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, name, _COMMIT)):
+            out.append(int(name.split("_", 1)[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = list_checkpoints(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template: Any, *, step: int | None = None,
+                       shardings: Any = None):
+    """Restore into the structure of ``template`` (arrays or SDS). With
+    ``shardings`` (a NamedSharding pytree) each leaf is device_put with its
+    target sharding — this is where elastic re-scaling happens.
+    Returns (tree, step, extra)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    paths, leaves, treedef = _flatten_with_paths(template)
+    by_path = {e["path"]: e for e in manifest["index"]}
+    if set(paths) != set(by_path):
+        missing = set(paths) - set(by_path)
+        extra_p = set(by_path) - set(paths)
+        raise ValueError(f"checkpoint/template mismatch: missing={sorted(missing)[:4]} "
+                         f"extra={sorted(extra_p)[:4]}")
+    s_leaves = None
+    if shardings is not None:
+        s_flat, _ = jax.tree_util.tree_flatten(shardings)
+        s_leaves = s_flat
+
+    out = []
+    for i, (p, tmpl) in enumerate(zip(paths, leaves)):
+        arr = np.load(os.path.join(d, by_path[p]["file"]))
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(f"shape mismatch at {p}: ckpt {arr.shape} "
+                             f"vs template {tmpl.shape}")
+        if s_leaves is not None:
+            out.append(jax.device_put(arr.astype(tmpl.dtype), s_leaves[i]))
+        else:
+            out.append(jnp.asarray(arr, dtype=tmpl.dtype))
+    return (jax.tree_util.tree_unflatten(treedef, out), manifest["step"],
+            manifest.get("extra", {}))

@@ -1,0 +1,69 @@
+"""SPx gradient compression with error feedback — the paper's quantizer
+applied to the distributed-optimization layer.
+
+Cross-pod (DCN) bandwidth is the scarcest link in a multi-pod job; the DP
+gradient all-reduce is the only traffic that crosses it (DESIGN.md §4).
+Compressing that reduction to 8-bit SPx codes cuts DCN bytes 4x (f32) /
+2x (bf16). Error feedback keeps the scheme unbiased over time: the residual
+(g - Q(g)) is added back into the next step's gradient, which provably
+preserves SGD convergence for quantizers with bounded relative error.
+
+Usage (inside a jit'd train step):
+    comp = GradCompressor("sp2_8")
+    ef = comp.init(grads)                     # error-feedback buffers
+    grads_c, ef = comp.compress(grads, ef)    # quantize (+EF) pre-reduce
+The compressed representation here is the fake-quantized tensor — XLA's
+all-reduce then moves values that carry <=8 bits of information; on a real
+DCN fabric the runtime ships the codes + scale. The EF state is what makes
+the low-bit reduction semantically safe, and is what we test.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spx
+
+__all__ = ["GradCompressor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompressor:
+    scheme: str = "sp2_8"
+    min_size: int = 4096        # don't bother compressing small leaves
+
+    def _eligible(self, leaf) -> bool:
+        return leaf.size >= self.min_size and jnp.issubdtype(
+            leaf.dtype, jnp.floating)
+
+    def init(self, grads):
+        return jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32)
+            if self._eligible(g) else jnp.zeros((), jnp.float32), grads)
+
+    def compress(self, grads, ef):
+        """Returns (compressed grads, new error-feedback state)."""
+        levels = spx.scheme_levels(self.scheme)
+        lut = spx.codebook(levels)
+
+        def one(g, e):
+            if not self._eligible(g):
+                return g, jnp.zeros((), jnp.float32)
+            g32 = g.astype(jnp.float32) + e          # add back residual
+            scale = jnp.max(jnp.abs(g32), axis=-1, keepdims=True)
+            scale = jnp.maximum(scale, 1e-20)
+            codes = spx.quantize_to_codes(g32, levels, scale)
+            gq = spx.dequantize_codes(codes, lut, scale, dtype=jnp.float32)
+            return gq.astype(g.dtype), g32 - gq      # new residual
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_e = treedef.flatten_up_to(ef)
+        outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        gq = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        new_ef = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        return gq, new_ef
+
+    def wire_bits(self) -> int:
+        return spx.code_width(spx.scheme_levels(self.scheme))

@@ -1,0 +1,212 @@
+"""Optimizers, implemented from scratch (no optax offline): SGD(+momentum),
+AdamW, and AdamW-Q8 — AdamW with SPx-quantized (8-bit) moments. Q8 moments
+halve→quarter optimizer HBM versus f32 Adam, which is what lets the 1T-param
+config fit 512 v5e chips (DESIGN.md §4); it is also the paper's quantization
+applied beyond inference.
+
+API: opt = make_optimizer("adamw", lr=1e-3); state = opt.init(params);
+params, state = opt.update(params, grads, state).
+All updates are pure jit-able pytree maps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spx
+from repro.core.quantized import QuantizedTensor
+
+__all__ = ["Optimizer", "make_optimizer", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (params, grads, state) ->
+                                               # (params, state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    # multiply in the grad's own dtype (bf16 grads stay bf16 — halves the
+    # transient grad-tree bytes; the f32 accumulation happens in the moments)
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum) — the paper's §4.1 training rule (eta=0.5, plain SGD)
+# ---------------------------------------------------------------------------
+
+def _sgd(lr: float, momentum: float = 0.0):
+    def init(params):
+        step = jnp.zeros((), jnp.int32)
+        if momentum == 0.0:
+            return {"step": step}
+        return {"step": step,
+                "mu": jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(params, grads, state):
+        if momentum == 0.0:
+            new_p = jax.tree_util.tree_map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_p, {"step": state["step"] + 1}
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state["mu"], grads)
+        new_p = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, mu)
+        return new_p, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer("sgd", init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def _adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+           weight_decay: float = 0.0):
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree_util.tree_map(z, params),
+                "nu": jax.tree_util.tree_map(z, params)}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["mu"],
+                                     state["nu"])
+        new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda o: o[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda o: o[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW-Q8: SPx 8-bit quantized moments (beyond-paper, on-theme)
+# ---------------------------------------------------------------------------
+
+_MOM_SCHEME = "sp2_8"        # signed, nonuniform — matches grad distribution
+_VAR_SCHEME = "uniform8"     # nu >= 0; uniform on [0, max]
+
+
+def _q8_state(p):
+    """Per-leaf: codes uint8 + one f32 scale per last-dim channel."""
+    shape = p.shape
+    scale_shape = shape[:-1] + (1,) if len(shape) >= 1 else (1,)
+    return {"codes": jnp.zeros(shape, jnp.uint8),
+            "scale": jnp.zeros(scale_shape, jnp.float32)}
+
+
+def _q8_read(q, levels_lut):
+    return spx.dequantize_codes(q["codes"], levels_lut, q["scale"],
+                                dtype=jnp.float32)
+
+
+def _q8_write(x, levels, levels_lut):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) if x.ndim >= 1 \
+        else jnp.abs(x)
+    scale = jnp.maximum(scale, 1e-20)
+    codes = spx.quantize_to_codes(x, levels, scale)
+    return {"codes": codes, "scale": scale}
+
+
+def _adamw_q8(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+              weight_decay: float = 0.0):
+    m_levels = spx.scheme_levels(_MOM_SCHEME)
+    m_lut = spx.codebook(m_levels)
+    v_levels_np = spx.scheme_levels(_VAR_SCHEME)
+    # variance is non-negative: use the non-negative half, rescaled
+    import numpy as np
+    v_levels = np.asarray(v_levels_np)
+    v_levels = v_levels[v_levels >= 0]
+    v_levels = v_levels / v_levels.max()
+    v_lut = spx.codebook(v_levels)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree_util.tree_map(_q8_state, params),
+                "nu": jax.tree_util.tree_map(_q8_state, params)}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd_slice(p, g, mq, vq):
+            g = g.astype(jnp.float32)
+            m = b1 * _q8_read(mq, m_lut) + (1 - b1) * g
+            v = b2 * _q8_read(vq, v_lut) + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return new_p, _q8_write(m, m_levels, m_lut), \
+                _q8_write(v, v_levels, v_lut)
+
+        def upd(p, g, mq, vq):
+            # large stacked leaves (layer-scanned params): update one
+            # layer-slice at a time via lax.map — the f32 dequantized
+            # moments exist only per slice, never for the whole (L, ...)
+            # stack (61x smaller transients on the 1T MoE config)
+            if p.ndim >= 3 and p.shape[0] > 1 and p.size > 2 ** 24:
+                return jax.lax.map(lambda t: upd_slice(*t), (p, g, mq, vq))
+            return upd_slice(p, g, mq, vq)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["mu"])
+        flat_v = treedef.flatten_up_to(state["nu"])
+        outs = [upd(p, g, m, v) for p, g, m, v in
+                zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+        mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+        nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+        return new_p, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer("adamw_q8", init, update)
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return _sgd(lr, kw.get("momentum", 0.0))
+    if name == "adamw":
+        return _adamw(lr, **kw)
+    if name == "adamw_q8":
+        return _adamw_q8(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,199 @@
+"""The training driver: step compilation, grad accumulation, periodic
+checkpointing, preemption recovery, and a straggler/stall watchdog.
+
+Fault model (DESIGN.md §4):
+  * process death / preemption  -> restart resumes from the latest committed
+    checkpoint (atomic commit protocol in checkpoint.py); `--kill-at-step`
+    injects this in CI.
+  * step stall / straggler      -> StepWatchdog tracks an EMA of step times;
+    a step exceeding ``stall_factor`` x EMA raises StallDetected so the
+    driver can checkpoint + re-enter (on real fleets: re-schedule the pod).
+  * elastic rescale             -> checkpoints are mesh-agnostic; restore
+    re-shards onto whatever mesh the restarted job has.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .compression import GradCompressor
+from .optimizer import Optimizer, clip_by_global_norm
+
+__all__ = ["TrainLoop", "StepWatchdog", "StallDetected", "TrainConfig",
+           "make_grad_accum_step"]
+
+
+class StallDetected(RuntimeError):
+    pass
+
+
+class StepWatchdog:
+    """EMA step-time tracker; flags stragglers/stalls."""
+
+    def __init__(self, stall_factor: float = 5.0, warmup: int = 3,
+                 min_stall_s: float = 1.0):
+        self.stall_factor = stall_factor
+        self.warmup = warmup
+        self.min_stall_s = min_stall_s
+        self.ema = None
+        self.n = 0
+        self.stalls = 0
+
+    def observe(self, dt: float):
+        self.n += 1
+        if self.n <= self.warmup:
+            self.ema = dt if self.ema is None else 0.5 * (self.ema + dt)
+            return
+        threshold = max(self.stall_factor * self.ema, self.min_stall_s)
+        if dt > threshold:
+            self.stalls += 1
+            raise StallDetected(
+                f"step took {dt:.2f}s vs EMA {self.ema:.2f}s "
+                f"(factor {self.stall_factor})")
+        self.ema = 0.9 * self.ema + 0.1 * dt
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    max_steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    log_every: int = 10
+    grad_clip: float = 1.0
+    accum_steps: int = 1
+    compress_grads: str | None = None   # e.g. "sp2_8" for cross-pod DP
+    kill_at_step: int | None = None     # fault injection (CI)
+
+
+def make_grad_accum_step(loss_fn: Callable, opt: Optimizer, *,
+                         accum_steps: int = 1, grad_clip: float = 1.0,
+                         compressor: GradCompressor | None = None,
+                         pod_axis: str | None = None):
+    """Build a jit-able step: (params, opt_state, ef, batch) ->
+    (params, opt_state, ef, metrics).
+
+    With accum_steps > 1 the batch's leading dim is split into microbatches
+    and scanned — the backward of microbatch i overlaps XLA's DP reduce of
+    microbatch i-1 (latency-hiding scheduler).
+    With a compressor, gradients are SPx-fake-quantized with error feedback
+    before the (cross-pod) mean — see compression.py.
+    """
+    def step(params, opt_state, ef, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, (l, m)
+
+            micro_batches = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum_steps, -1) + x.shape[1:]), batch)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metricses) = jax.lax.scan(micro, zero,
+                                                      micro_batches)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree_util.tree_map(jnp.mean, metricses)
+
+        if compressor is not None:
+            grads, ef = compressor.compress(grads, ef)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        params, opt_state = opt.update(params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, gnorm=gnorm)
+        return params, opt_state, ef, metrics
+
+    return step
+
+
+class TrainLoop:
+    """Drives steps with checkpoint/restart + watchdog. Generic over model:
+    needs loss_fn(params, batch), an Optimizer, an init params fn and a data
+    iterator."""
+
+    def __init__(self, loss_fn, opt: Optimizer, init_params_fn,
+                 data_iter, cfg: TrainConfig, *,
+                 compressor: GradCompressor | None = None,
+                 donate: bool = True):
+        self.cfg = cfg
+        self.opt = opt
+        self.loss_fn = loss_fn
+        self.init_params_fn = init_params_fn
+        self.data = data_iter
+        self.compressor = compressor
+        step = make_grad_accum_step(
+            loss_fn, opt, accum_steps=cfg.accum_steps,
+            grad_clip=cfg.grad_clip, compressor=compressor)
+        self._step = jax.jit(step, donate_argnums=(0, 1, 2) if donate else ())
+        self.watchdog = StepWatchdog()
+        self.history: list[dict] = []
+
+    # -- state bootstrap ----------------------------------------------------
+
+    def init_or_restore(self):
+        params = self.init_params_fn()
+        opt_state = self.opt.init(params)
+        ef = (self.compressor.init(params) if self.compressor
+              else jnp.zeros(()))
+        start = 0
+        if self.cfg.ckpt_dir and latest_step(self.cfg.ckpt_dir) is not None:
+            (params, opt_state, ef), start, _ = restore_checkpoint(
+                self.cfg.ckpt_dir, (params, opt_state, ef))
+            print(f"[train] resumed from step {start}")
+        return params, opt_state, ef, start
+
+    # -- main loop ------------------------------------------------------------
+
+    def run(self):
+        params, opt_state, ef, start = self.init_or_restore()
+        step_i = start
+        while step_i < self.cfg.max_steps:
+            batch = next(self.data)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.time()
+            if (self.cfg.kill_at_step is not None
+                    and step_i == self.cfg.kill_at_step):
+                raise KeyboardInterrupt(
+                    f"fault injection: killed at step {step_i}")
+            params, opt_state, ef, metrics = self._step(params, opt_state,
+                                                        ef, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            step_i += 1
+            try:
+                self.watchdog.observe(dt)
+            except StallDetected as e:
+                print(f"[watchdog] {e}; checkpointing and continuing")
+                if self.cfg.ckpt_dir:
+                    save_checkpoint(self.cfg.ckpt_dir, step_i,
+                                    (params, opt_state, ef),
+                                    keep=self.cfg.keep_ckpts)
+            rec = {"step": step_i,
+                   "loss": float(metrics["loss"]),
+                   "dt": dt}
+            self.history.append(rec)
+            if step_i % self.cfg.log_every == 0:
+                print(f"[train] step {step_i} loss {rec['loss']:.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            if (self.cfg.ckpt_dir and self.cfg.ckpt_every
+                    and step_i % self.cfg.ckpt_every == 0):
+                save_checkpoint(self.cfg.ckpt_dir, step_i,
+                                (params, opt_state, ef),
+                                keep=self.cfg.keep_ckpts)
+        if self.cfg.ckpt_dir:
+            save_checkpoint(self.cfg.ckpt_dir, step_i,
+                            (params, opt_state, ef),
+                            keep=self.cfg.keep_ckpts)
+        return params, self.history

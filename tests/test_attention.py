@@ -1,0 +1,159 @@
+"""Attention unit tests: chunked online attention vs naive oracle, RoPE
+properties, decode-attention (flash-decode) consistency, GQA grouping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref as kref
+from repro.nn import attention as attn
+from repro.nn.layers import Runtime
+from repro.nn.rotary import apply_mrope, apply_rope
+
+jax.config.update("jax_platform_name", "cpu")
+
+RT = Runtime(impl="ref", q_chunk=8)
+
+
+def _mk(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention == naive attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q_chunk", [4, 8, 16, 64])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_naive(q_chunk, causal):
+    b, h, s, dh = 2, 3, 32, 16
+    q, k, v = _mk((b, h, s, dh), 1), _mk((b, h, s, dh), 2), \
+        _mk((b, h, s, dh), 3)
+    got = attn._chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk)
+    want = kref.attention_ref(q.reshape(b * h, s, dh),
+                              k.reshape(b * h, s, dh),
+                              v.reshape(b * h, s, dh),
+                              causal=causal).reshape(b, h, s, dh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attention_core_gqa_grouping():
+    b, hq, hkv, s, dh = 2, 8, 2, 16, 8
+    q = _mk((b, hq, s, dh), 4)
+    k = _mk((b, hkv, s, dh), 5)
+    v = _mk((b, hkv, s, dh), 6)
+    got = attn.attention_core(q, k, v, causal=True, rt=RT)
+    kr = jnp.repeat(k, 4, axis=1)
+    vr = jnp.repeat(v, 4, axis=1)
+    want = kref.attention_ref(q.reshape(-1, s, dh), kr.reshape(-1, s, dh),
+                              vr.reshape(-1, s, dh),
+                              causal=True).reshape(q.shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(shift=st.integers(0, 16), seed=st.integers(0, 100))
+def test_rope_relative_position_invariance(shift, seed):
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    dh = 16
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, dh)), jnp.float32)
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.full((1, 1), i, jnp.int32))
+        kj = apply_rope(k, jnp.full((1, 1), j, jnp.int32))
+        return float(jnp.sum(qi * kj))
+    a = dot_at(3, 1)
+    b = dot_at(3 + shift, 1 + shift)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+
+
+def test_rope_preserves_norm():
+    x = _mk((2, 5, 3, 32), 7)
+    pos = jnp.broadcast_to(jnp.arange(5, dtype=jnp.int32), (2, 5))
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_mrope_equals_rope_when_streams_equal():
+    """Text-only M-RoPE (t=h=w) must reduce exactly to RoPE."""
+    b, s, h, dh = 2, 6, 2, 24
+    x = _mk((b, s, h, dh), 8)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    pos3 = jnp.broadcast_to(pos[:, None, :], (b, 3, s))
+    got = apply_mrope(x, pos3, sections=(4, 4, 4))
+    want = apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash-decode (local path)
+# ---------------------------------------------------------------------------
+
+def test_decode_attention_matches_full_softmax():
+    b, hq, hkv, s, dh = 2, 4, 2, 16, 8
+    k_cache = _mk((b, hkv, s, dh), 9)
+    v_cache = _mk((b, hkv, s, dh), 10)
+    q = _mk((b, hq, dh), 11)
+    k_new = _mk((b, hkv, dh), 12)
+    v_new = _mk((b, hkv, dh), 13)
+    pos = jnp.int32(7)
+    out, k2, v2 = attn.decode_attention(q, k_cache, v_cache, k_new, v_new,
+                                        pos, rt=RT)
+    # oracle: cache with position 7 overwritten, attend to <= 7
+    kc = k_cache.at[:, :, 7].set(k_new)
+    vc = v_cache.at[:, :, 7].set(v_new)
+    kr = jnp.repeat(kc, 2, axis=1)
+    vr = jnp.repeat(vc, 2, axis=1)
+    sc = jnp.einsum("bhd,bhkd->bhk", q, kr) / np.sqrt(dh)
+    mask = jnp.arange(s) <= 7
+    sc = jnp.where(mask[None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    want = jnp.einsum("bhk,bhkd->bhd", p, vr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(k2), np.asarray(kc), rtol=1e-6)
+
+
+def test_decode_attention_per_slot_positions():
+    """Different per-batch positions: each row writes its own slot and
+    masks its own depth."""
+    b, hkv, s, dh = 2, 1, 8, 4
+    k_cache = _mk((b, hkv, s, dh), 14)
+    v_cache = _mk((b, hkv, s, dh), 15)
+    q = _mk((b, 2, dh), 16)
+    k_new = _mk((b, hkv, dh), 17)
+    v_new = _mk((b, hkv, dh), 18)
+    pos = jnp.asarray([2, 5], jnp.int32)
+    out, k2, v2 = attn.decode_attention(q, k_cache, v_cache, k_new, v_new,
+                                        pos, rt=RT)
+    # row 0 wrote at 2; row 1 wrote at 5
+    np.testing.assert_allclose(np.asarray(k2[0, :, 2]),
+                               np.asarray(k_new[0]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(k2[1, :, 5]),
+                               np.asarray(k_new[1]), rtol=1e-6)
+    # row 0's slot 5 untouched
+    np.testing.assert_allclose(np.asarray(k2[0, :, 5]),
+                               np.asarray(k_cache[0, :, 5]), rtol=1e-6)
+    # per-row oracle
+    for i, p_i in enumerate([2, 5]):
+        kc = k_cache.at[i, :, p_i].set(k_new[i])[i]
+        vc = v_cache.at[i, :, p_i].set(v_new[i])[i]
+        kr = jnp.repeat(kc, 2, axis=0)
+        vr = jnp.repeat(vc, 2, axis=0)
+        sc = jnp.einsum("hd,hkd->hk", q[i], kr) / np.sqrt(dh)
+        sc = jnp.where(jnp.arange(s) <= p_i, sc, -1e30)
+        want = jnp.einsum("hk,hkd->hd", jax.nn.softmax(sc, -1), vr)
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)

@@ -1,0 +1,162 @@
+"""Per-kernel validation: pallas (interpret mode) vs pure-jnp ref oracle,
+swept over shapes, dtypes, schemes and block sizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spx
+from repro.core.quantized import quantize_weight
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.spx_matmul import spx_matmul_pallas
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(shape, dtype, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# spx_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k", [(8, 128, 128), (128, 128, 256),
+                                   (64, 256, 128), (256, 128, 384)])
+@pytest.mark.parametrize("scheme", ["sp2_4", "sp2_8", "spx_8_x3"])
+def test_spx_matmul_shapes_schemes(m, n, k, scheme):
+    x = _mk((m, k), jnp.float32, seed=m + n + k)
+    w = _mk((k, n), jnp.float32, seed=1, scale=0.05)
+    qt = quantize_weight(w, scheme)
+    scale = qt.scale.reshape(1, n)
+    want = ref.spx_matmul_ref(x, qt.codes, scale, qt.lut, packed=qt.packed)
+    got = spx_matmul_pallas(x, qt.codes, scale, qt.lut, packed=qt.packed,
+                            bm=min(128, m), bn=128, bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spx_matmul_dtypes(dtype):
+    x = _mk((64, 256), dtype, seed=7)
+    w = _mk((256, 128), jnp.float32, seed=8, scale=0.05)
+    qt = quantize_weight(w, "sp2_4")
+    scale = qt.scale.reshape(1, 128)
+    want = ref.spx_matmul_ref(x, qt.codes, scale, qt.lut, packed=qt.packed)
+    got = spx_matmul_pallas(x, qt.codes, scale, qt.lut, packed=qt.packed,
+                            bm=64, bn=128, bk=128, interpret=True)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("blocks", [(32, 128, 128), (64, 64, 64),
+                                    (128, 128, 384)])
+def test_spx_matmul_block_sweep(blocks):
+    bm, bn, bk = blocks
+    x = _mk((128, 384), jnp.float32, seed=11)
+    w = _mk((384, 256), jnp.float32, seed=12, scale=0.05)
+    qt = quantize_weight(w, "sp2_8")   # unpacked path
+    scale = qt.scale.reshape(1, 256)
+    want = ref.spx_matmul_ref(x, qt.codes, scale, qt.lut, packed=qt.packed)
+    got = spx_matmul_pallas(x, qt.codes, scale, qt.lut, packed=qt.packed,
+                            bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ops_wrapper_pads_ragged_m_and_reshapes():
+    x = _mk((3, 5, 256), jnp.float32, seed=13)   # leading dims + ragged M=15
+    w = _mk((256, 128), jnp.float32, seed=14, scale=0.05)
+    qt = quantize_weight(w, "sp2_4")
+    want = ops.spx_matmul(x, qt, impl="ref")
+    got = ops.spx_matmul(x, qt, impl="interpret")
+    assert got.shape == (3, 5, 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ops_wrapper_ragged_k_falls_back_to_ref():
+    x = _mk((4, 100), jnp.float32, seed=15)      # K=100 has no aligned block
+    w = _mk((100, 30), jnp.float32, seed=16)     # N=30 ragged too
+    qt = quantize_weight(w, "sp2_4")
+    got = ops.spx_matmul(x, qt, impl="interpret")
+    want = ops.spx_matmul(x, qt, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_quantized_matmul_end_to_end_snr():
+    """The kernel path preserves the quantization SNR of the scheme."""
+    x = _mk((32, 512), jnp.float32, seed=17)
+    w = _mk((512, 256), jnp.float32, seed=18, scale=0.02)
+    qt = quantize_weight(w, "sp2_8")
+    exact = x @ w
+    got = ops.spx_matmul(x, qt, impl="interpret", out_dtype=jnp.float32)
+    snr = 20 * np.log10(np.linalg.norm(exact) /
+                        np.linalg.norm(np.asarray(got) - np.asarray(exact)))
+    assert snr > 25.0
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq,skv,dh", [(128, 128, 64), (256, 256, 128),
+                                       (128, 384, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_ref(sq, skv, dh, causal):
+    if causal and sq != skv:
+        pytest.skip("causal requires square for this oracle comparison")
+    bh = 3
+    q = _mk((bh, sq, dh), jnp.float32, seed=21)
+    k = _mk((bh, skv, dh), jnp.float32, seed=22)
+    v = _mk((bh, skv, dh), jnp.float32, seed=23)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    got = flash_attention_pallas(q, k, v, causal=causal, bq=64, bkv=128,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = _mk((2, 128, 64), dtype, seed=31)
+    k = _mk((2, 128, 64), dtype, seed=32)
+    v = _mk((2, 128, 64), dtype, seed=33)
+    want = ref.attention_ref(q, k, v, causal=True)
+    got = flash_attention_pallas(q, k, v, causal=True, bq=64, bkv=64,
+                                 interpret=True)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_block_sweep():
+    q = _mk((2, 256, 64), jnp.float32, seed=41)
+    k = _mk((2, 256, 64), jnp.float32, seed=42)
+    v = _mk((2, 256, 64), jnp.float32, seed=43)
+    want = ref.attention_ref(q, k, v, causal=True)
+    for bq, bkv in [(32, 32), (64, 128), (256, 64), (128, 256)]:
+        got = flash_attention_pallas(q, k, v, causal=True, bq=bq, bkv=bkv,
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3, err_msg=f"{bq},{bkv}")
+
+
+def test_gqa_wrapper_expansion():
+    """ops.flash_attention handles GQA (Hq=8, Hkv=2) and matches per-group ref."""
+    b, hq, hkv, s, dh = 2, 8, 2, 128, 64
+    q = _mk((b, hq, s, dh), jnp.float32, seed=51)
+    k = _mk((b, hkv, s, dh), jnp.float32, seed=52)
+    v = _mk((b, hkv, s, dh), jnp.float32, seed=53)
+    got = ops.flash_attention(q, k, v, causal=True, impl="interpret")
+    kr = jnp.repeat(k, hq // hkv, axis=1).reshape(b * hq, s, dh)
+    vr = jnp.repeat(v, hq // hkv, axis=1).reshape(b * hq, s, dh)
+    want = ref.attention_ref(q.reshape(b * hq, s, dh), kr, vr,
+                             causal=True).reshape(q.shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,111 @@
+"""SSM correctness: the chunked-parallel training forms must match the
+sequential (decode) recurrences step for step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import ssm
+from repro.nn.layers import Runtime
+
+jax.config.update("jax_platform_name", "cpu")
+RT = Runtime(impl="ref", q_chunk=16)
+
+
+def test_selective_scan_chunked_matches_sequential():
+    rng = np.random.default_rng(0)
+    B, S, di, ds = 2, 32, 8, 4
+    u = jnp.asarray(rng.standard_normal((B, S, di)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, di)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (di, ds)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, ds)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, ds)), jnp.float32)
+    D = jnp.asarray(rng.standard_normal((di,)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((B, di, ds)), jnp.float32)
+
+    # sequential oracle
+    def step(h, t):
+        dA = jnp.exp(dt[:, t, :, None] * A)
+        dBu = dt[:, t, :, None] * Bm[:, t, None, :] * u[:, t, :, None]
+        h = dA * h + dBu
+        y = jnp.einsum("bds,bs->bd", h, Cm[:, t])
+        return h, y
+    h = h0
+    ys = []
+    for t in range(S):
+        h, y = step(h, t)
+        ys.append(y)
+    y_seq = jnp.stack(ys, 1) + u * D
+
+    for chunk in (4, 8, 16, 32):
+        y_chunk, hT = ssm._selective_scan(u, dt, A, Bm, Cm, D, h0,
+                                          chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                                   rtol=2e-4, atol=2e-4, err_msg=f"c={chunk}")
+        np.testing.assert_allclose(np.asarray(hT), np.asarray(h),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_mlstm_chunkwise_matches_cell(chunk):
+    rng = np.random.default_rng(1)
+    B, S, NH, dh = 2, 32, 2, 8
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    q, k, v = mk(B, S, NH, dh), mk(B, S, NH, dh), mk(B, S, NH, dh)
+    ig = mk(B, S, NH) * 2
+    fg = mk(B, S, NH) * 2 + 1
+    C0 = mk(B, NH, dh, dh) * 0.1
+    n0 = jnp.abs(mk(B, NH, dh)) * 0.1
+    m0 = mk(B, NH) * 0.1
+
+    # sequential oracle via the decode cell
+    C, n, m = C0, n0, m0
+    hs = []
+    for t in range(S):
+        C, n, m, h = ssm._mlstm_cell(C, n, m, q[:, t], k[:, t], v[:, t],
+                                     ig[:, t], fg[:, t])
+        hs.append(h)
+    h_seq = jnp.stack(hs, 1)
+
+    h_chunk, Cc, nc_, mc = ssm._mlstm_chunkwise(q, k, v, ig, fg, C0, n0, m0,
+                                                chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h_seq),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(Cc), np.asarray(C), rtol=3e-4,
+                               atol=3e-4)
+    np.testing.assert_allclose(np.asarray(mc), np.asarray(m), rtol=3e-4,
+                               atol=3e-4)
+
+
+def test_mamba_apply_prefill_state_continues():
+    """prefill(x[:16]) state + decode steps == full forward."""
+    rng = np.random.default_rng(2)
+    B, S, D = 2, 16, 12
+    p = ssm.mamba_init(jax.random.PRNGKey(0), D, d_state=4, d_conv=3,
+                       expand=2, dt_rank=4)
+    x = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+    y_full = ssm.mamba_apply(p, x, rt=RT)
+    y_pre, st = ssm.mamba_apply(p, x[:, :S // 2], rt=RT, return_state=True)
+    ys = [y_pre]
+    for t in range(S // 2, S):
+        y_t, st = ssm.mamba_decode_step(p, x[:, t:t + 1], st, rt=RT)
+        ys.append(y_t)
+    y_cat = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_cat), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_slstm_apply_decode_consistency():
+    rng = np.random.default_rng(3)
+    B, S, D = 2, 12, 16
+    p = ssm.slstm_init(jax.random.PRNGKey(1), D, n_heads=2)
+    x = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+    y_full = ssm.slstm_apply(p, x, rt=RT)
+    y_pre, st = ssm.slstm_apply(p, x[:, :S // 2], rt=RT, return_state=True)
+    ys = [y_pre]
+    for t in range(S // 2, S):
+        y_t, st = ssm.slstm_decode_step(p, x[:, t:t + 1], st, rt=RT)
+        ys.append(y_t)
+    y_cat = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_cat), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)
