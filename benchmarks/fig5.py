@@ -13,7 +13,8 @@ from repro.core.pipeline import plan_matmul_blocks
 from repro.data.mnist import make_dataset
 from repro.models.mlp_mnist import PAPER_LAYERS, paper_mlp_apply, \
     paper_mlp_init
-from repro.nn.layers import Runtime, quantize_params
+from repro.nn.layers import quantize_params
+from repro.runtime import Runtime
 
 BATCHES = (1, 8, 64, 256, 1024)
 

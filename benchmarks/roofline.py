@@ -38,7 +38,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs import assigned_archs, get_config  # noqa: E402
 from repro.configs.base import LM_SHAPES  # noqa: E402
 from repro.launch.dryrun import parse_collectives  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.compat import cost_analysis_dict  # noqa: E402
+from repro.launch.mesh import ambient_mesh, make_production_mesh  # noqa: E402
 from repro.launch.steps import build_step  # noqa: E402
 
 from . import hw  # noqa: E402
@@ -59,13 +60,13 @@ def _compile_cost_variant(cfg, shape, n_periods: int, mesh, *,
         kw["quantized"] = quantized
         if shape.kind == "decode":
             kw["kv_quant"] = kv_quant
-    with jax.set_mesh(mesh):
+    with ambient_mesh(mesh):
         bundle = build_step(vcfg, shape, mesh, **kw)
         jfn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                       out_shardings=bundle.out_shardings,
                       donate_argnums=bundle.donate_argnums)
         compiled = jfn.lower(*bundle.args).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     coll = parse_collectives(compiled.as_text())
     coll_bytes = sum(c["bytes"] for c in coll["computations"].values())
     n_while = len(coll["whiles"])

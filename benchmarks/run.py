@@ -45,6 +45,33 @@ def kernel_microbench(csv_rows):
                          dense_bytes / qbytes))
 
 
+def plan_report(csv_rows):
+    """Execution plans the runtime picks for each bundled config's hot
+    matmul (d_model -> d_ff at serving batch 256): block geometry from the
+    §3.1 analytical model, with the pipeline margin the paper argues in
+    prose. These are the tiles the Pallas kernels actually run with."""
+    from repro.configs import get_config, list_configs
+    from repro.core.pipeline import TPU_V5E
+    from repro.runtime import planner
+
+    print("\n== execution plans (spx_matmul, 4-bit, m=256) ==")
+    print(f"  {'arch':22s} {'K->N':>14s}  bm x bn x bk   margin  vmem(MB)")
+    for name in list_configs():
+        cfg = get_config(name)
+        k_dim, n_dim = cfg.d_model, cfg.d_ff or cfg.d_model
+        plan = planner.plan_matmul(256, k_dim, n_dim, weight_bits=4,
+                                   packed=True)
+        if plan is None:
+            print(f"  {name:22s} {k_dim:6d}->{n_dim:<6d}  (ref fallback: "
+                  "ragged dims)")
+            continue
+        print(f"  {name:22s} {k_dim:6d}->{n_dim:<6d}  "
+              f"{plan.bm:4d}x{plan.bn:4d}x{plan.bk:4d} "
+              f"{plan.margin:7.2f}  {plan.vmem_bytes/2**20:7.2f}")
+        assert plan.vmem_bytes <= TPU_V5E.vmem_bytes
+        csv_rows.append((f"plan/{name}", 0.0, plan.margin))
+
+
 def roofline_table(csv_rows):
     """Summarize any roofline artifacts present (produced by
     `python -m benchmarks.roofline --all`)."""
@@ -80,6 +107,7 @@ def main() -> None:
     quant_quality.run(csv_rows)
     fig5.run(csv_rows)
     kernel_microbench(csv_rows)
+    plan_report(csv_rows)
     if not args.skip_roofline_table:
         roofline_table(csv_rows)
 

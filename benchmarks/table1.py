@@ -20,7 +20,8 @@ from repro.core.pipeline import TPU_V5E
 from repro.data.mnist import make_dataset
 from repro.models.mlp_mnist import PAPER_LAYERS, paper_mlp_apply, \
     paper_mlp_init
-from repro.nn.layers import Runtime, quantize_params
+from repro.nn.layers import quantize_params
+from repro.runtime import Runtime
 
 CPU_W = 65.0
 TPU_W = 170.0

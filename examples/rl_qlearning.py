@@ -18,7 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.mlp_mnist import mlp_net_apply, mlp_net_init
-from repro.nn.layers import Runtime, quantize_params
+from repro.nn.layers import quantize_params
+from repro.runtime import Runtime
 from repro.training import make_optimizer
 
 

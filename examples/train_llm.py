@@ -15,7 +15,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.tokens import TokenStream
 from repro.models import lm as lm_mod
-from repro.nn.layers import Runtime, param_count
+from repro.nn.layers import param_count
+from repro.runtime import Runtime
 from repro.training import (GradCompressor, TrainConfig, TrainLoop,
                             make_optimizer)
 

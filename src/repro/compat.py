@@ -1,0 +1,36 @@
+"""Shims over the jax API surface that moved between the versions we
+support (see also launch/mesh.py for mesh-context shims)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "cost_analysis_dict", "pallas_compiler_params"]
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() returned a per-device list on older jax,
+    a single dict on newer; normalize to the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return cost
+
+
+def pallas_compiler_params(**kw):
+    """pltpu.TPUCompilerParams was renamed CompilerParams; accept both."""
+    import jax.experimental.pallas.tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or pltpu.TPUCompilerParams
+    return cls(**kw)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """jax.shard_map moved out of jax.experimental and renamed its
+    replication-check kwarg (check_rep -> check_vma); accept both worlds."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

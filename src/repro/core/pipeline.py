@@ -80,23 +80,32 @@ def _block_cost(m, n, k, bm, bn, bk, weight_bits, act_bytes, hw: HwSpec):
 
 def plan_matmul_blocks(m: int, n: int, k: int, *, weight_bits: int = 16,
                        act_bytes: int = 2, hw: HwSpec = TPU_V5E,
-                       candidates=(128, 256, 512, 1024, 2048)) -> BlockPlan:
+                       candidates=(128, 256, 512, 1024, 2048),
+                       candidates_m=None, candidates_n=None,
+                       candidates_k=None,
+                       vmem_fraction: float = 0.9) -> BlockPlan:
     """Pick (bm, bn, bk) maximizing pipeline margin subject to VMEM fit and
-    MXU alignment. Deterministic, pure math — used for kernel defaults and
-    reported in the benchmarks."""
+    MXU alignment. Deterministic, pure math — used by the block planner
+    (repro.runtime.planner) and reported in the benchmarks.
+
+    ``candidates_m/n/k`` restrict the search per dimension (the planner
+    passes divisor-filtered lists so chosen blocks tile the problem
+    exactly); each defaults to ``candidates``.
+    """
     best = None
-    for bm in candidates:
+    for bm in (candidates_m if candidates_m is not None else candidates):
         if bm > max(m, hw.mxu_dim):
             continue
-        for bn in candidates:
+        for bn in (candidates_n if candidates_n is not None else candidates):
             if bn > max(n, hw.mxu_dim):
                 continue
-            for bk in candidates:
+            for bk in (candidates_k if candidates_k is not None
+                       else candidates):
                 if bk > max(k, hw.mxu_dim):
                     continue
                 load_b, flops, t_l, t_c, vmem = _block_cost(
                     m, n, k, bm, bn, bk, weight_bits, act_bytes, hw)
-                if vmem > hw.vmem_bytes * 0.9:
+                if vmem > hw.vmem_bytes * vmem_fraction:
                     continue
                 # whole-matmul arithmetic intensity at this blocking: the
                 # activation tile re-streams once per n-block, weights once

@@ -18,10 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["flash_attention_pallas", "DEFAULT_BQ", "DEFAULT_BKV"]
+from repro.compat import pallas_compiler_params
 
-DEFAULT_BQ = 256
-DEFAULT_BKV = 512
+__all__ = ["flash_attention_pallas"]
 
 _NEG_INF = -1e30
 
@@ -71,10 +70,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     jax.jit,
     static_argnames=("causal", "bq", "bkv", "out_dtype", "interpret"))
 def flash_attention_pallas(q, k, v, *, causal: bool = True,
-                           bq: int = DEFAULT_BQ, bkv: int = DEFAULT_BKV,
+                           bq: int, bkv: int,
                            out_dtype=None, interpret: bool = False):
     """q: (BH, Sq, dh); k, v: (BH, Skv, dh) — heads pre-flattened into the
-    leading dim (GQA expansion handled by the wrapper). Returns (BH, Sq, dh).
+    leading dim (GQA expansion handled by the wrapper). Block shapes come
+    from the planner (repro.runtime.planner). Returns (BH, Sq, dh).
     """
     bh, sq, dh = q.shape
     _, skv, _ = k.shape
@@ -102,7 +102,7 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

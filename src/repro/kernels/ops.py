@@ -1,99 +1,177 @@
-"""jit'd public wrappers around the Pallas kernels with impl dispatch.
+"""Public quantized-matmul / attention entry points, dispatched through the
+execution-plan runtime (DESIGN.md §7).
 
-``impl`` semantics everywhere:
-  * "auto"      — pallas on TPU, ref elsewhere (CPU CI, 512-dev dry-run)
-  * "pallas"    — compiled Mosaic kernel (TPU target)
-  * "interpret" — pallas_call(interpret=True): kernel body executed in
-                  Python/XLA on CPU; used by tests to validate the kernel
-                  logic bit-for-bit against the ref oracle
-  * "ref"       — pure-jnp oracle
+Every impl of each op registers itself in ``repro.runtime.registry`` with an
+availability predicate; ``spx_matmul`` / ``flash_attention`` resolve the
+impl once (cached per backend) and fetch block shapes from
+``repro.runtime.planner`` — the per-shape analytical solution of the
+paper's §3.1 load-vs-compute inequality — instead of the old hard-coded
+one-size-fits-all tiles and per-callsite string matching.
+
+``impl`` semantics (see registry docstring): auto | pallas | interpret | ref.
 """
 from __future__ import annotations
 
+import functools
+import time
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import spx
 from repro.core.quantized import QuantizedTensor
+from repro.runtime import planner, registry
 
 from . import ref as ref_impl
-from .flash_attention import DEFAULT_BKV, DEFAULT_BQ, flash_attention_pallas
-from .spx_matmul import DEFAULT_BK, DEFAULT_BM, DEFAULT_BN, spx_matmul_pallas
+from .flash_attention import flash_attention_pallas
+from .spx_matmul import spx_matmul_pallas
 
 __all__ = ["spx_matmul", "flash_attention", "resolve_impl"]
 
-_BLOCK_CANDIDATES = (512, 384, 256, 128, 64, 32, 16, 8)
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
 
 
 def resolve_impl(impl: str) -> str:
-    if impl != "auto":
-        return impl
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+    """Deprecated shim (one PR): impl-name resolution now lives in
+    repro.runtime.registry; kept for callers that only need the name."""
+    return registry.resolve("spx_matmul", impl).impl
 
 
-def _divisor_block(dim: int, preferred: int) -> int | None:
-    if dim % preferred == 0:
-        return preferred
-    for c in _BLOCK_CANDIDATES:
-        if c <= dim and dim % c == 0:
-            return c
-    return None
+# ---------------------------------------------------------------------------
+# spx_matmul: x2 (M, K) @ dequant(qt (K, N)) — registered impls share the
+# signature fn(x2, qt, scale, *, plan, out_dtype, ...)
+# ---------------------------------------------------------------------------
+
+@registry.register("spx_matmul", "ref",
+                   priority=registry.PRIORITY_REFERENCE)
+def _spx_matmul_ref(x2, qt: QuantizedTensor, scale, *, plan, out_dtype):
+    del plan
+    return ref_impl.spx_matmul_ref(x2, qt.codes, scale, qt.lut,
+                                   packed=qt.packed, out_dtype=out_dtype)
 
 
-def spx_matmul(x: jax.Array, qt: QuantizedTensor, *, impl: str = "auto",
-               bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
-               bk: int = DEFAULT_BK, out_dtype=None) -> jax.Array:
-    """x: (..., K) @ dequant(qt: (K, N)) -> (..., N)."""
-    impl = resolve_impl(impl)
-    k_dim, n_dim = qt.logical_shape
-    lut = qt.lut
-    scale = qt.scale.reshape(1, n_dim).astype(jnp.float32)
-
-    if impl == "ref":
-        # NO reshape: dot_general contracts x's last dim directly, so a
-        # (batch@data, seq@model, K) sharding survives — flattening to 2-D
-        # merges differently-sharded dims and forces a full gather
-        # (measured 16x replicated linear-layer compute, §Perf cell 2)
-        return ref_impl.spx_matmul_ref(x, qt.codes, scale, lut,
-                                       packed=qt.packed, out_dtype=out_dtype)
-
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
+def _spx_matmul_planned(x2, qt: QuantizedTensor, scale, *, plan, out_dtype,
+                        interpret: bool):
     m = x2.shape[0]
-
-    bn_eff = _divisor_block(n_dim, bn)
-    bk_eff = _divisor_block(k_dim, bk)
-    if qt.packed and bn_eff is not None and bn_eff % 2:
-        bn_eff = None
-    if bn_eff is None or bk_eff is None:   # ragged dims: oracle fallback
-        out = ref_impl.spx_matmul_ref(x2, qt.codes, scale, lut,
-                                      packed=qt.packed, out_dtype=out_dtype)
-        return out.reshape(*lead, n_dim)
-
-    bm_eff = min(bm, m)
+    bm_eff = min(plan.bm, m)
     pad_m = (-m) % bm_eff
     if pad_m:
         x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
     out = spx_matmul_pallas(
-        x2, qt.codes, scale, lut, packed=qt.packed,
-        bm=bm_eff, bn=bn_eff, bk=bk_eff, out_dtype=out_dtype,
-        interpret=(impl == "interpret"))
-    if pad_m:
-        out = out[:m]
+        x2, qt.codes, scale, qt.lut, packed=qt.packed,
+        bm=bm_eff, bn=plan.bn, bk=plan.bk, out_dtype=out_dtype,
+        interpret=interpret)
+    return out[:m] if pad_m else out
+
+
+registry.register("spx_matmul", "pallas",
+                  priority=registry.PRIORITY_ACCELERATOR,
+                  available=_on_tpu)(
+    functools.partial(_spx_matmul_planned, interpret=False))
+registry.register("spx_matmul", "interpret",
+                  priority=registry.PRIORITY_DEBUG)(
+    functools.partial(_spx_matmul_planned, interpret=True))
+
+
+def spx_matmul(x: jax.Array, qt: QuantizedTensor, *, impl: str = "auto",
+               out_dtype=None) -> jax.Array:
+    """x: (..., K) @ dequant(qt: (K, N)) -> (..., N)."""
+    entry = registry.resolve("spx_matmul", impl)
+    k_dim, n_dim = qt.logical_shape
+    scale = qt.scale.reshape(1, n_dim).astype(jnp.float32)
+
+    if entry.impl == "ref":
+        # NO reshape: dot_general contracts x's last dim directly, so a
+        # (batch@data, seq@model, K) sharding survives — flattening to 2-D
+        # merges differently-sharded dims and forces a full gather
+        # (measured 16x replicated linear-layer compute, EXPERIMENTS.md
+        # §Perf cell 2)
+        return entry.fn(x, qt, scale, plan=None, out_dtype=out_dtype)
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    plan = planner.plan_matmul(m, k_dim, n_dim, weight_bits=qt.bits,
+                               act_bytes=x.dtype.itemsize, packed=qt.packed)
+    if plan is None:                       # ragged dims: oracle fallback
+        out = ref_impl.spx_matmul_ref(x2, qt.codes, scale, qt.lut,
+                                      packed=qt.packed, out_dtype=out_dtype)
+        return out.reshape(*lead, n_dim)
+    if entry.impl == "pallas" and planner.autotune_enabled():
+        key = ("spx_matmul", m, k_dim, n_dim, qt.bits, qt.packed)
+        measured = planner.measured_plan(key)
+        if measured is not None:
+            # shape keys are concrete even at trace time, so a winner
+            # measured during an eager warm-up applies inside jitted steps
+            plan = measured
+        elif not isinstance(x2, jax.core.Tracer):
+            # measure on concrete arrays only: under an outer jit the
+            # runner would time abstract tracing, not kernel execution,
+            # and cache a garbage plan
+            plan = _autotune_matmul(key, entry, x2, qt, scale, plan,
+                                    out_dtype)
+    out = entry.fn(x2, qt, scale, plan=plan, out_dtype=out_dtype)
     return out.reshape(*lead, n_dim)
 
 
+def _autotune_matmul(key, entry, x2, qt, scale, plan, out_dtype):
+    """Measured refinement over divisor-legal candidates near the
+    analytical plan (env-gated; see planner.autotune_enabled)."""
+    m = x2.shape[0]
+    k_dim, n_dim = qt.logical_shape
+    bm_c, bn_c, bk_c = planner.matmul_candidates(m, k_dim, n_dim,
+                                                 packed=qt.packed)
+    cands = [plan] + [
+        planner.MatmulBlocks(bm, bn, bk, False, 0.0, 0)
+        for bm in bm_c[:3] for bn in bn_c[:3] for bk in bk_c[:3]
+        if (bm, bn, bk) != (plan.bm, plan.bn, plan.bk)]
+
+    def runner(p):
+        f = lambda: entry.fn(x2, qt, scale, plan=p, out_dtype=out_dtype)
+        jax.block_until_ready(f())         # compile + warm
+        t0 = time.perf_counter()
+        jax.block_until_ready(f())
+        return time.perf_counter() - t0
+
+    return planner.measured_best(key, cands, runner)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: qf/kf/vf (B*H, S, dh) — registered impls share the
+# signature fn(qf, kf, vf, *, causal, plan)
+# ---------------------------------------------------------------------------
+
+@registry.register("flash_attention", "ref",
+                   priority=registry.PRIORITY_REFERENCE)
+def _flash_attention_ref(qf, kf, vf, *, causal, plan):
+    del plan
+    return ref_impl.attention_ref(qf, kf, vf, causal=causal)
+
+
+def _flash_attention_planned(qf, kf, vf, *, causal, plan, interpret: bool):
+    return flash_attention_pallas(qf, kf, vf, causal=causal, bq=plan.bq,
+                                  bkv=plan.bkv, interpret=interpret)
+
+
+registry.register("flash_attention", "pallas",
+                  priority=registry.PRIORITY_ACCELERATOR,
+                  available=_on_tpu)(
+    functools.partial(_flash_attention_planned, interpret=False))
+registry.register("flash_attention", "interpret",
+                  priority=registry.PRIORITY_DEBUG)(
+    functools.partial(_flash_attention_planned, interpret=True))
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, impl: str = "auto",
-                    bq: int = DEFAULT_BQ, bkv: int = DEFAULT_BKV) -> jax.Array:
+                    causal: bool = True, impl: str = "auto") -> jax.Array:
     """GQA attention. q: (B, Hq, Sq, dh); k, v: (B, Hkv, Skv, dh);
     Hq % Hkv == 0. Returns (B, Hq, Sq, dh)."""
     b, hq, sq, dh = q.shape
     _, hkv, skv, _ = k.shape
     assert hq % hkv == 0, (hq, hkv)
     rep = hq // hkv
-    impl = resolve_impl(impl)
+    entry = registry.resolve("flash_attention", impl)
 
     if rep > 1:
         k = jnp.repeat(k, rep, axis=1)
@@ -102,13 +180,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kf = k.reshape(b * hq, skv, dh)
     vf = v.reshape(b * hq, skv, dh)
 
-    if impl == "ref":
-        return ref_impl.attention_ref(qf, kf, vf, causal=causal).reshape(q.shape)
+    if entry.impl == "ref":
+        return entry.fn(qf, kf, vf, causal=causal, plan=None).reshape(q.shape)
 
-    bq_eff = _divisor_block(sq, bq)
-    bkv_eff = _divisor_block(skv, bkv)
-    if bq_eff is None or bkv_eff is None:
-        return ref_impl.attention_ref(qf, kf, vf, causal=causal).reshape(q.shape)
-    out = flash_attention_pallas(qf, kf, vf, causal=causal, bq=bq_eff,
-                                 bkv=bkv_eff, interpret=(impl == "interpret"))
-    return out.reshape(q.shape)
+    plan = planner.plan_attention(sq, skv, dh, act_bytes=q.dtype.itemsize)
+    if plan is None:                       # ragged seq dims: ref fallback
+        return ref_impl.attention_ref(qf, kf, vf,
+                                      causal=causal).reshape(q.shape)
+    return entry.fn(qf, kf, vf, causal=causal, plan=plan).reshape(q.shape)

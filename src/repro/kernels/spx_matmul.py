@@ -32,11 +32,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["spx_matmul_pallas", "DEFAULT_BM", "DEFAULT_BN", "DEFAULT_BK"]
+from repro.compat import pallas_compiler_params
 
-DEFAULT_BM = 256
-DEFAULT_BN = 256
-DEFAULT_BK = 512
+__all__ = ["spx_matmul_pallas"]
 
 
 def _unpack_int4_block(codes):
@@ -77,14 +75,14 @@ def _kernel(x_ref, codes_ref, scale_ref, lut_ref, o_ref, acc_ref, *,
     jax.jit,
     static_argnames=("packed", "bm", "bn", "bk", "out_dtype", "interpret"))
 def spx_matmul_pallas(x, codes, scale, lut, *, packed: bool,
-                      bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
-                      bk: int = DEFAULT_BK, out_dtype=None,
+                      bm: int, bn: int, bk: int, out_dtype=None,
                       interpret: bool = False):
     """x:(M,K) @ dequant(codes:(K,N), scale:(1,N), lut:(2^b,)) -> (M,N).
 
     codes are uint8; if ``packed`` the stored array is (K, N//2) with two
-    4-bit codes per byte. Shapes must be pre-padded to block multiples by the
-    ops.py wrapper.
+    4-bit codes per byte. Block shapes are chosen by the planner
+    (repro.runtime.planner) and passed explicitly; shapes must be pre-padded
+    to block multiples by the ops.py wrapper.
     """
     m, k = x.shape
     n = scale.shape[-1]
@@ -108,7 +106,7 @@ def spx_matmul_pallas(x, codes, scale, lut, *, packed: bool,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, codes, scale, lut)

@@ -22,7 +22,8 @@ import jax
 
 from repro.configs import assigned_archs, get_config
 from repro.configs.base import LM_SHAPES
-from repro.launch.mesh import make_production_mesh
+from repro.compat import cost_analysis_dict
+from repro.launch.mesh import ambient_mesh, make_production_mesh
 from repro.launch.steps import build_step
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -119,7 +120,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with ambient_mesh(mesh):
         bundle = build_step(cfg, shape, mesh, **(extra_kw or {}))
         jfn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                       out_shardings=bundle.out_shardings,
@@ -131,7 +132,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)
 

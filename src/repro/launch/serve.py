@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models import lm as lm_mod
-from repro.nn.layers import Runtime
+from repro.runtime import Runtime
 from repro.serving.engine import Request, ServeEngine
 
 

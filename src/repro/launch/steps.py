@@ -17,7 +17,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import encdec as ed
 from repro.models import lm as lm_mod
-from repro.nn.layers import Runtime, quantize_params
+from repro.nn.layers import quantize_params
+from repro.runtime import Runtime
 from repro.sharding import ShardingPolicy, make_policy
 from repro.training.optimizer import clip_by_global_norm, make_optimizer
 

@@ -21,7 +21,7 @@ from repro.configs import get_config, reduced
 from repro.data.tokens import TokenStream
 from repro.models import encdec as ed
 from repro.models import lm as lm_mod
-from repro.nn.layers import Runtime
+from repro.runtime import Runtime
 from repro.training import (GradCompressor, TrainConfig, TrainLoop,
                             make_optimizer)
 
@@ -57,7 +57,7 @@ def main(argv=None):
     data = TokenStream(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
     loss_mod = ed.encdec_loss if cfg.enc_dec else lm_mod.lm_loss
 
-    def loss_fn(params, batch):
+    def loss_fn(params, batch, rt):
         if cfg.enc_dec and "frames" not in batch:
             b = batch["tokens"].shape[0]
             batch = dict(batch, frames=jnp.zeros(
@@ -77,7 +77,7 @@ def main(argv=None):
                      accum_steps=args.accum, kill_at_step=args.kill_at_step,
                      compress_grads=args.compress_grads)
     loop = TrainLoop(loss_fn, make_optimizer(args.optimizer, lr=args.lr),
-                     init_params, iter(data), tc, compressor=comp)
+                     init_params, iter(data), tc, compressor=comp, rt=rt)
     try:
         params, hist = loop.run()
         uniform = float(jnp.log(jnp.float32(cfg.vocab_size)))

@@ -10,8 +10,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.nn.layers import (Runtime, dense_init, embedding_apply,
-                             embedding_init, norm_apply, norm_init)
+from repro.nn.layers import (dense_init, embedding_apply, embedding_init,
+                             norm_apply, norm_init)
+from repro.runtime import Runtime
 from repro.nn.transformer import (slot_init_cache, stack_apply, stack_decode,
                                   stack_init, stack_prefill)
 from .lm import _default_positions, _head_w, chunked_ce

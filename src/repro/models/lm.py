@@ -16,9 +16,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.nn.layers import (Runtime, dense_apply, dense_init,
-                             embedding_apply, embedding_init, norm_apply,
-                             norm_init)
+from repro.nn.layers import (dense_apply, dense_init, embedding_apply,
+                             embedding_init, norm_apply, norm_init)
+from repro.runtime import Runtime
 from repro.nn.transformer import (slot_init_cache, stack_apply, stack_decode,
                                   stack_prefill, stack_init)
 

@@ -12,7 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.nn.layers import Runtime, dense_apply, dense_init
+from repro.nn.layers import dense_apply, dense_init
+from repro.runtime import Runtime
 
 __all__ = ["PAPER_LAYERS", "mlp_net_init", "mlp_net_apply", "paper_mlp_init",
            "paper_mlp_apply", "paper_mlp_loss", "paper_mlp_predict"]

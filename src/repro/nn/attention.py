@@ -24,10 +24,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.kernels import ops
 from repro.kernels import ref as kref
+from repro.runtime import Runtime, registry
 
-from .layers import Runtime, dense_apply, dense_init
+from .layers import dense_apply, dense_init
 from .rotary import apply_mrope, apply_rope
 
 __all__ = ["attn_init", "attn_apply_dense", "attention_core",
@@ -131,7 +133,7 @@ def attention_core(q, k, v, *, causal: bool, rt: Runtime):
             and q.shape[2] % dict(rt.mesh.shape)[rt.model_axis] == 0 \
             and q.shape[2] == k.shape[2]:
         return _attention_core_cp(q, k, v, causal=causal, rt=rt)
-    impl = ops.resolve_impl(rt.impl)
+    impl = registry.resolve("flash_attention", rt.impl).impl
     if impl in ("pallas", "interpret"):
         return ops.flash_attention(q, k, v, causal=causal, impl=impl)
     b, hq, sq, dh = q.shape
@@ -168,7 +170,7 @@ def _attention_core_cp(q, k, v, *, causal: bool, rt: Runtime):
                                   q_chunk=min(rt.q_chunk, s_loc),
                                   unroll=rt.unroll, q_offset=off)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=rt.mesh,
         in_specs=(P(dp, None, axis, None), P(dp, None, None, None),
                   P(dp, None, None, None)),
@@ -355,7 +357,7 @@ def decode_attention(q, k_cache, v_cache, k_new, v_new, pos, *, rt: Runtime):
                   else arr_spec)
     rep_spec = P(dp, None, None)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         functools.partial(_local_flash_decode, shard_size=shard_size,
                           axis=axis),
         mesh=rt.mesh,

@@ -15,48 +15,31 @@ import jax.numpy as jnp
 
 from repro.core.quantized import QuantizedTensor
 from repro.kernels import ops
+# Deprecation shim (this PR only): Runtime moved to repro.runtime.context —
+# a frozen, hashable dataclass that is a legal static jit argument. Import
+# it from ``repro.runtime`` going forward.
+from repro.runtime.context import Runtime
 
 __all__ = [
     "Runtime", "dense_init", "dense_apply", "embedding_init",
     "embedding_apply", "rmsnorm_init", "rmsnorm_apply", "layernorm_init",
     "layernorm_apply", "norm_init", "norm_apply", "quantize_params",
-    "param_count",
+    "param_count", "opt_barrier",
 ]
 
 
-class Runtime:
-    """Execution knobs threaded through apply fns (static per trace)."""
+@jax.custom_vjp
+def opt_barrier(x):
+    """optimization_barrier with an identity gradient. This jax version has
+    no differentiation rule for the barrier primitive; its job here (block
+    f32-convert fusion into residual-stack / checkpoint saves) is a
+    forward-pass layout concern, so the backward passes cotangents through
+    untouched. Accepts pytrees."""
+    return jax.lax.optimization_barrier(x)
 
-    def __init__(self, impl: str = "auto", q_chunk: int = 1024,
-                 remat: str = "none", mesh=None, decode_seq_axis: str | None = None,
-                 data_axes: tuple = ("data",), model_axis: str = "model",
-                 unroll: bool = False, kv_quant: bool = False,
-                 attn_cp: bool = False):
-        self.impl = impl                  # kernel impl: auto|pallas|interpret|ref
-        self.q_chunk = q_chunk            # query-chunk for memory-bound attention
-        self.remat = remat                # none|full|dots
-        self.mesh = mesh                  # jax Mesh or None (single device)
-        self.decode_seq_axis = decode_seq_axis  # mesh axis for context-parallel decode
-        self.data_axes = data_axes
-        self.model_axis = model_axis
-        # unroll=True removes every While loop (layer scan unrolled, SSM /
-        # attention / loss chunking disabled) — used ONLY by the roofline
-        # cost-variant compiles, where XLA's count-scan-bodies-once would
-        # otherwise undercount FLOPs/bytes/collectives (DESIGN.md §6)
-        self.unroll = unroll
-        # SPx-int8 KV cache (beyond-paper: the quantizer applied to the
-        # decode bottleneck — halves KV HBM reads; EXPERIMENTS.md §Perf)
-        self.kv_quant = kv_quant
-        # context-parallel prefill attention (seq-sharded q, gathered KV)
-        self.attn_cp = attn_cp
 
-    def replace(self, **kw) -> "Runtime":
-        new = Runtime(self.impl, self.q_chunk, self.remat, self.mesh,
-                      self.decode_seq_axis, self.data_axes, self.model_axis,
-                      self.unroll, self.kv_quant, self.attn_cp)
-        for k, v in kw.items():
-            setattr(new, k, v)
-        return new
+opt_barrier.defvjp(lambda x: (jax.lax.optimization_barrier(x), None),
+                   lambda _, g: (g,))
 
 
 # ---------------------------------------------------------------------------

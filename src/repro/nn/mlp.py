@@ -9,7 +9,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .layers import Runtime, dense_apply, dense_init
+from repro.runtime import Runtime
+
+from .layers import dense_apply, dense_init
 
 __all__ = ["mlp_init", "mlp_apply", "ACTIVATIONS"]
 

@@ -22,9 +22,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.quantized import QuantizedTensor, dequantize
+from repro.runtime import Runtime
 
-from .layers import Runtime, dense_apply, dense_init
+from .layers import dense_apply, dense_init
 from .mlp import ACTIVATIONS
 
 __all__ = ["moe_init", "moe_apply", "expert_capacity"]
@@ -149,7 +151,7 @@ def moe_apply(p: dict, x: jax.Array, *, top_k: int, n_experts: int,
             and n_tok % max(n_data, 1) == 0):
         axis = rt.model_axis
         dp = rt.data_axes if rt.data_axes else None
-        fn = jax.shard_map(
+        fn = shard_map(
             functools.partial(_moe_local, top_k=top_k,
                               n_experts_global=n_experts,
                               capacity_factor=capacity_factor,

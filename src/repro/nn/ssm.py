@@ -14,8 +14,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .layers import (Runtime, constrain_feature_sharded, dense_apply,
-                     dense_init)
+from repro.runtime import Runtime
+
+from .layers import (constrain_feature_sharded, dense_apply, dense_init,
+                     opt_barrier)
 
 __all__ = [
     "mamba_init", "mamba_apply", "mamba_decode_step", "mamba_init_state",
@@ -103,7 +105,7 @@ def _selective_scan(u, dt, A, Bm, Cm, D, h0, *, chunk: int = SSM_CHUNK,
 
     @functools.partial(jax.checkpoint, prevent_cse=False)
     def chunk_body(h, inp):
-        inp = jax.lax.optimization_barrier(inp)
+        inp = opt_barrier(inp)
         u_c, dt_c, B_c, C_c = inp                          # (B,c,di), (B,c,ds)
         # f32 only per chunk-slice — full-sequence (B,S,di) tensors stay in
         # the model's compute dtype (bf16 at production scale)
@@ -283,7 +285,7 @@ def _mlstm_chunkwise(q, k, v, ig, fg, C0, n0, m0, *, chunk: int = 128,
 
     @functools.partial(jax.checkpoint, prevent_cse=False)
     def chunk_body(carry, inp):
-        inp = jax.lax.optimization_barrier(inp)
+        inp = opt_barrier(inp)
         C0c, n0c, m0c = carry                    # (B,NH,dh,dh),(B,NH,dh),(B,NH)
         q_c, k_c, v_c, ig_c, fg_c = inp          # (B,c,NH,*)
         logf = jax.nn.log_sigmoid(fg_c)          # (B,c,NH)

@@ -21,10 +21,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.runtime import Runtime
 
 from . import ssm
 from .attention import attn_apply_dense, attn_decode_step, attn_init
-from .layers import Runtime, norm_apply, norm_init
+from .layers import norm_apply, norm_init, opt_barrier
 from .mlp import mlp_apply, mlp_init
 from .moe import moe_apply, moe_init
 
@@ -262,14 +263,14 @@ def _period_body(carry, xs, *, cfg: ArchConfig, rt: Runtime, mode: str,
         # keep the remat'd carry stack in the carry's own (bf16) dtype: the
         # barrier stops XLA fusing the first norm's f32 convert into the
         # residual-stack write (which would double its bytes)
-        x = jax.lax.optimization_barrier(x)
+        x = opt_barrier(x)
     new_caches = []
     for j, slot in enumerate(cfg.pattern):
         def run_slot(sp, xx, _slot=slot, _cache=caches[j]):
             if mode == "train":
                 # keep the checkpoint-saved slot input in its own dtype
                 # (block f32-convert fusion into the residual save)
-                xx = jax.lax.optimization_barrier(xx)
+                xx = opt_barrier(xx)
             return _slot_apply(_slot, sp, xx, positions, cfg, rt, mode=mode,
                                cache=_cache, pos=pos, enc_out=enc_out,
                                causal=causal)

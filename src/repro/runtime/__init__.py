@@ -1,0 +1,27 @@
+"""Unified execution-plan runtime (DESIGN.md §7).
+
+Three pieces, co-designed the way RedMulE/FantastIC4 argue the win comes:
+
+  * ``context.Runtime``   — frozen, hashable execution knobs; a legal
+                            static jit argument (zero retrace on
+                            equal-value replace)
+  * ``registry``          — kernel dispatch table: (op, impl) -> entry,
+                            resolved once per backend instead of per
+                            callsite string matching
+  * ``planner``           — analytical (bm, bn, bk)/(bq, bkv) selection
+                            from core/pipeline's §3.1 load-vs-compute
+                            model, lru-cached per shape, env-overridable,
+                            with gated measured autotuning
+"""
+from . import planner, registry
+from .context import Runtime
+from .planner import (AttentionBlocks, MatmulBlocks, plan_attention,
+                      plan_matmul)
+from .registry import (KernelEntry, KernelUnavailable, available_impls,
+                       register, resolve)
+
+__all__ = [
+    "Runtime", "planner", "registry", "MatmulBlocks", "AttentionBlocks",
+    "plan_matmul", "plan_attention", "KernelEntry", "KernelUnavailable",
+    "available_impls", "register", "resolve",
+]

@@ -1,0 +1,56 @@
+"""The frozen execution context threaded through every layer.
+
+``Runtime`` is a frozen, hashable dataclass so it is a legal *static*
+argument to ``jax.jit`` (``static_argnums``): two Runtimes with equal field
+values hash and compare equal, so replacing one with an equal-valued copy
+causes **zero** recompiles (see tests/test_runtime.py::test_no_retrace).
+This replaces the old mutable knobs object in ``nn/layers.py`` whose
+positional ``replace()`` silently dropped fields when the field list grew.
+
+Field semantics are unchanged from the original object:
+
+  impl             kernel impl: auto | pallas | interpret | ref (resolved
+                   once through ``repro.runtime.registry``)
+  q_chunk          query-chunk for the memory-bounded jnp attention path
+  remat            none | full | dots
+  mesh             jax Mesh or None (single device); Mesh is hashable
+  decode_seq_axis  mesh axis for context-parallel decode
+  data_axes        batch axes (tuple — kept hashable)
+  model_axis       tensor/expert-parallel axis
+  unroll           True removes every While loop (roofline cost variants
+                   only — DESIGN.md §6)
+  kv_quant         SPx-int8 KV cache (EXPERIMENTS.md §Perf cell 1)
+  attn_cp          context-parallel prefill attention (§Perf cell 2)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+__all__ = ["Runtime"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    impl: str = "auto"
+    q_chunk: int = 1024
+    remat: str = "none"
+    mesh: Any = None
+    decode_seq_axis: Optional[str] = None
+    data_axes: tuple = ("data",)
+    model_axis: Optional[str] = "model"
+    unroll: bool = False
+    kv_quant: bool = False
+    attn_cp: bool = False
+
+    def __post_init__(self):
+        # lists sneak in from argparse/config plumbing; tuples keep us
+        # hashable (and therefore jit-static)
+        if not isinstance(self.data_axes, tuple):
+            object.__setattr__(self, "data_axes",
+                               tuple(self.data_axes or ()))
+
+    def replace(self, **kw) -> "Runtime":
+        """Keyword-only field replacement (dataclasses.replace), immune to
+        the field-order bugs of the old positional copy."""
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,227 @@
+"""Analytical block planner: per-shape (bm, bn, bk) / (bq, bkv) selection.
+
+The paper's §3.1 soundness condition — loading must stay ahead of compute —
+is evaluated analytically by ``core/pipeline.plan_matmul_blocks``; this
+module turns it into the *execution plan* the kernels actually run with,
+instead of the old one-size-fits-all ``DEFAULT_BM/BN/BK`` constants:
+
+  * candidate blocks are filtered to exact divisors of (N, K) (and (Sq,
+    Skv) for attention) so the Pallas grid tiles the problem with no
+    remainder — M alone is padded by the ops wrapper;
+  * the surviving candidate maximizing (pipelined, margin, -vmem) under the
+    VMEM budget wins; plans are lru-cached per shape so planning is free
+    after the first trace;
+  * ``None`` means no legal blocking exists (ragged dims) and the caller
+    falls back to the jnp reference path — exactly the old behavior, now in
+    one place.
+
+Overrides:
+  REPRO_BLOCKS_MATMUL="bm,bn,bk"  pin matmul blocks (divisibility checked)
+  REPRO_BLOCKS_ATTN="bq,bkv"      pin attention blocks
+  REPRO_AUTOTUNE=1                measured autotuning: ops wrappers time the
+                                  top analytical candidates on the real
+                                  kernel and cache the winner per shape
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Callable, Optional
+
+from repro.core.pipeline import HwSpec, TPU_V5E, plan_matmul_blocks
+
+__all__ = [
+    "MatmulBlocks", "AttentionBlocks", "plan_matmul", "plan_attention",
+    "matmul_candidates", "autotune_enabled", "measured_best",
+    "measured_plan", "clear_plan_cache", "DEFAULT_BM",
+    "VMEM_BUDGET_FRACTION",
+]
+
+# bm candidate ceiling for tiny-M problems (M is padded to the chosen bm,
+# so candidates above this only waste padding). This is the only default
+# tile constant left in the tree — kernels take explicit blocks now.
+DEFAULT_BM = 256
+
+#: fraction of per-core VMEM a plan may claim (double buffers + scratch
+#: accounting lives in core/pipeline._block_cost)
+VMEM_BUDGET_FRACTION = 0.9
+
+_BLOCK_CANDIDATES = (2048, 1024, 512, 384, 256, 128, 64, 32, 16, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulBlocks:
+    bm: int
+    bn: int
+    bk: int
+    pipelined: bool          # t_load <= t_compute (paper's §3.1 condition)
+    margin: float            # compute/load ratio; >1 => DMA fully hidden
+    vmem_bytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionBlocks:
+    bq: int
+    bkv: int
+    pipelined: bool
+    margin: float
+    vmem_bytes: int
+
+
+def _divisors(dim: int, *, even: bool = False) -> tuple[int, ...]:
+    out = tuple(c for c in _BLOCK_CANDIDATES
+                if c <= dim and dim % c == 0
+                and (not even or c % 2 == 0))
+    # the §3.1 margin is block-size-neutral along K (load and compute both
+    # scale linearly), so an unfiltered search ties and the min-VMEM
+    # tie-break degenerates to 8-wide tiles. Floor candidates at the MXU
+    # tile (128) when the dim admits one — sub-MXU tiles waste the systolic
+    # array no matter what the byte model says.
+    if out:
+        floor = min(128, max(out))
+        out = tuple(c for c in out if c >= floor)
+    return out
+
+
+def matmul_candidates(m: int, k: int, n: int, *,
+                      packed: bool = False) -> tuple:
+    """(bm, bn, bk) candidate tuples under the divisibility rules the
+    Pallas wrapper needs: bn | n, bk | k (bn even when int4-packed); bm is
+    free (M is padded)."""
+    bm_c = tuple(c for c in _BLOCK_CANDIDATES if c <= max(m, DEFAULT_BM))
+    bn_c = _divisors(n, even=packed)
+    bk_c = _divisors(k)
+    return bm_c, bn_c, bk_c
+
+
+def _env_override(var: str, n_fields: int) -> Optional[tuple[int, ...]]:
+    raw = os.environ.get(var)
+    if not raw:
+        return None
+    parts = tuple(int(p) for p in raw.replace(" ", "").split(","))
+    if len(parts) != n_fields:
+        raise ValueError(f"{var}={raw!r}: expected {n_fields} ints")
+    return parts
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_matmul_cached(m: int, k: int, n: int, weight_bits: int,
+                        act_bytes: int, packed: bool,
+                        hw: HwSpec) -> Optional[MatmulBlocks]:
+    bm_c, bn_c, bk_c = matmul_candidates(m, k, n, packed=packed)
+    if not bn_c or not bk_c:
+        return None                       # ragged dims: ref fallback
+    plan = plan_matmul_blocks(m, n, k, weight_bits=weight_bits,
+                              act_bytes=act_bytes, hw=hw,
+                              candidates_m=bm_c, candidates_n=bn_c,
+                              candidates_k=bk_c,
+                              vmem_fraction=VMEM_BUDGET_FRACTION)
+    # the tiny-problem fallback inside plan_matmul_blocks ignores the
+    # candidate filter; re-check divisibility before trusting it
+    if n % plan.bn or k % plan.bk or (packed and plan.bn % 2):
+        return None
+    return MatmulBlocks(plan.bm, plan.bn, plan.bk, plan.pipelined,
+                        plan.margin, plan.vmem_bytes)
+
+
+def plan_matmul(m: int, k: int, n: int, *, weight_bits: int = 16,
+                act_bytes: int = 2, packed: bool = False,
+                hw: HwSpec = TPU_V5E) -> Optional[MatmulBlocks]:
+    """Blocks for x:(M,K) @ W:(K,N) with b-bit SPx weight codes, or None if
+    no legal blocking exists (caller falls back to the ref path)."""
+    pinned = _env_override("REPRO_BLOCKS_MATMUL", 3)
+    if pinned is not None:
+        bm, bn, bk = pinned
+        if n % bn or k % bk or (packed and bn % 2):
+            return None
+        return MatmulBlocks(bm, bn, bk, False, 0.0, 0)
+    return _plan_matmul_cached(m, k, n, weight_bits, act_bytes, packed, hw)
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_attention_cached(sq: int, skv: int, dh: int, act_bytes: int,
+                           hw: HwSpec) -> Optional[AttentionBlocks]:
+    best = None
+    for bq in _divisors(sq):
+        for bkv in _divisors(skv):
+            # per inner grid step: stream the next (K, V) tile pair while
+            # the MXU runs QK^T + PV on the current one (q stays resident
+            # across the KV loop)
+            t_load = 2 * bkv * dh * act_bytes / hw.hbm_bw
+            t_compute = 4.0 * bq * bkv * dh / hw.peak_bf16_flops
+            vmem = (2 * (bq * dh + 2 * bkv * dh) * act_bytes
+                    + bq * dh * 4 + 2 * bq * 4)      # acc + (m, l) scratch
+            if vmem > hw.vmem_bytes * VMEM_BUDGET_FRACTION:
+                continue
+            margin = t_compute / max(t_load, 1e-30)
+            plan = AttentionBlocks(bq, bkv, t_load <= t_compute, margin,
+                                   int(vmem))
+            key = (plan.pipelined, plan.margin, -plan.vmem_bytes)
+            if best is None or key > (best.pipelined, best.margin,
+                                      -best.vmem_bytes):
+                best = plan
+    return best
+
+
+def plan_attention(sq: int, skv: int, dh: int, *, act_bytes: int = 2,
+                   hw: HwSpec = TPU_V5E) -> Optional[AttentionBlocks]:
+    """(bq, bkv) for flash attention over (Sq, Skv, dh), or None when the
+    sequence dims admit no candidate blocking (ref fallback)."""
+    pinned = _env_override("REPRO_BLOCKS_ATTN", 2)
+    if pinned is not None:
+        bq, bkv = pinned
+        if sq % bq or skv % bkv:
+            return None
+        return AttentionBlocks(bq, bkv, False, 0.0, 0)
+    return _plan_attention_cached(sq, skv, dh, act_bytes, hw)
+
+
+# ---------------------------------------------------------------------------
+# Measured autotuning (env/flag-gated)
+# ---------------------------------------------------------------------------
+
+_MEASURED: dict = {}
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "").lower() in ("1", "true",
+                                                            "measured")
+
+
+def measured_plan(key):
+    """Previously measured winner for this shape key, or None. Consulted at
+    trace time too (shapes are concrete there), so a winner measured during
+    an eager warm-up call applies to every later jitted step."""
+    return _MEASURED.get(key)
+
+
+def measured_best(key, plans, runner: Callable[[object], float]):
+    """Time each candidate plan with ``runner`` (seconds per call on the
+    real kernel + real arrays) and cache the winner per shape key. The ops
+    wrappers call this only when ``autotune_enabled()``; the analytical
+    plan always seeds the candidate list so measurement can only improve
+    on it."""
+    if key in _MEASURED:
+        return _MEASURED[key]
+    best, best_t = None, float("inf")
+    for plan in plans:
+        try:
+            t = runner(plan)
+        except Exception as e:     # candidate doesn't compile on this target
+            print(f"[planner] autotune candidate {plan} failed: {e!r}")
+            continue
+        if t < best_t:
+            best, best_t = plan, t
+    if best is None:
+        # nothing measured: return the analytical seed WITHOUT caching so a
+        # transient failure doesn't pin a known-bad plan for the process
+        return plans[0]
+    _MEASURED[key] = best
+    return best
+
+
+def clear_plan_cache():
+    _plan_matmul_cached.cache_clear()
+    _plan_attention_cached.cache_clear()
+    _MEASURED.clear()

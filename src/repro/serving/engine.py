@@ -20,7 +20,8 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import lm as lm_mod
-from repro.nn.layers import Runtime, quantize_params
+from repro.nn.layers import quantize_params
+from repro.runtime import Runtime
 
 __all__ = ["Request", "ServeEngine"]
 
@@ -52,15 +53,15 @@ class ServeEngine:
         self.params = params
         self._key = jax.random.PRNGKey(seed)
 
-        self._decode = jax.jit(
-            lambda p, tok, pos, caches: lm_mod.lm_decode_step(
-                p, tok, pos, caches, cfg, self.rt),
-            donate_argnums=(3,))
+        # cfg and rt are frozen/hashable and ride as *static* jit arguments:
+        # an engine whose Runtime is replaced by an equal-valued copy reuses
+        # the compiled steps (no retrace — tests/test_runtime.py)
+        self._decode = jax.jit(lm_mod.lm_decode_step, static_argnums=(4, 5),
+                               donate_argnums=(3,))
         # per-slot position prefill: tokens padded to max_prompt, true
         # lengths masked; logits of the last real token are picked host-side
-        self._prefill_one = jax.jit(
-            lambda p, tok, caches: lm_mod.lm_prefill(p, tok, caches, cfg,
-                                                     self.rt))
+        self._prefill_one = jax.jit(lm_mod.lm_prefill,
+                                    static_argnums=(3, 4))
         self.caches = lm_mod.init_caches(cfg, batch_slots, max_seq,
                                          dtype=jnp.float32)
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
@@ -96,7 +97,8 @@ class ServeEngine:
                 row_caches = lm_mod.init_caches(self.cfg, 1, self.max_seq,
                                                 dtype=jnp.float32)
                 logits, row_caches = self._prefill_one(self.params, tok,
-                                                       row_caches)
+                                                       row_caches, self.cfg,
+                                                       self.rt)
                 self.caches = _splice_caches(self.caches, row_caches, slot)
                 self.slot_pos[slot] = len(req.prompt)
                 first = self._pick_token(logits[0], req)
@@ -114,7 +116,8 @@ class ServeEngine:
         pos = jnp.asarray(self.slot_pos, jnp.int32)
         logits, self.caches = self._decode(self.params,
                                            jnp.asarray(tokens),
-                                           pos, self.caches)
+                                           pos, self.caches, self.cfg,
+                                           self.rt)
         logits = np.asarray(logits)
         for i in active:
             req = self.slot_req[i]

@@ -75,7 +75,7 @@ class TrainConfig:
 def make_grad_accum_step(loss_fn: Callable, opt: Optimizer, *,
                          accum_steps: int = 1, grad_clip: float = 1.0,
                          compressor: GradCompressor | None = None,
-                         pod_axis: str | None = None):
+                         pod_axis: str | None = None, rt=None):
     """Build a jit-able step: (params, opt_state, ef, batch) ->
     (params, opt_state, ef, metrics).
 
@@ -84,7 +84,13 @@ def make_grad_accum_step(loss_fn: Callable, opt: Optimizer, *,
     microbatch i-1 (latency-hiding scheduler).
     With a compressor, gradients are SPx-fake-quantized with error feedback
     before the (cross-pod) mean — see compression.py.
+    With ``rt`` (a frozen repro.runtime.Runtime), ``loss_fn`` is called as
+    ``loss_fn(params, batch, rt)`` — the Runtime binds here, once, instead
+    of being closed over ad hoc at every driver callsite.
     """
+    if rt is not None:
+        inner_loss = loss_fn
+        loss_fn = lambda params, batch: inner_loss(params, batch, rt)
     def step(params, opt_state, ef, batch):
         if accum_steps == 1:
             (loss, metrics), grads = jax.value_and_grad(
@@ -126,16 +132,17 @@ class TrainLoop:
     def __init__(self, loss_fn, opt: Optimizer, init_params_fn,
                  data_iter, cfg: TrainConfig, *,
                  compressor: GradCompressor | None = None,
-                 donate: bool = True):
+                 donate: bool = True, rt=None):
         self.cfg = cfg
         self.opt = opt
         self.loss_fn = loss_fn
         self.init_params_fn = init_params_fn
         self.data = data_iter
         self.compressor = compressor
+        self.rt = rt
         step = make_grad_accum_step(
             loss_fn, opt, accum_steps=cfg.accum_steps,
-            grad_clip=cfg.grad_clip, compressor=compressor)
+            grad_clip=cfg.grad_clip, compressor=compressor, rt=rt)
         self._step = jax.jit(step, donate_argnums=(0, 1, 2) if donate else ())
         self.watchdog = StepWatchdog()
         self.history: list[dict] = []
