@@ -1,5 +1,7 @@
 """Benchmark harness: one function per paper table/figure plus the kernel
-microbenchmark. Prints ``name,us_per_call,derived`` CSV at the end.
+microbenchmark and the dense-vs-paged serving comparison (which writes
+``BENCH_serving.json`` at the repo root). Prints ``name,us_per_call,derived``
+CSV at the end.
 
   PYTHONPATH=src python -m benchmarks.run [--skip-roofline-table]
 """
@@ -102,12 +104,13 @@ def main() -> None:
     args = ap.parse_args()
 
     csv_rows: list = []
-    from benchmarks import fig5, quant_quality, table1
+    from benchmarks import fig5, quant_quality, serving_bench, table1
     table1.run(csv_rows)
     quant_quality.run(csv_rows)
     fig5.run(csv_rows)
     kernel_microbench(csv_rows)
     plan_report(csv_rows)
+    serving_bench.run(csv_rows)
     if not args.skip_roofline_table:
         roofline_table(csv_rows)
 

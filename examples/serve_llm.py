@@ -1,16 +1,14 @@
 """Batched LM serving with SPx-quantized weights: train a small LM briefly
 (so the weights are non-random), quantize to the paper's 4-bit SP2, and
-serve a batch of requests through the continuous-batching engine, comparing
-dense vs quantized outputs and throughput.
+serve a batch of requests through the engine — comparing dense vs quantized
+weights AND dense vs paged KV layouts (throughput, occupancy, agreement).
 
   PYTHONPATH=src python examples/serve_llm.py
 """
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
@@ -46,9 +44,12 @@ def main(argv=None):
                .astype(np.int32) for _ in range(args.requests)]
 
     results = {}
-    for scheme in (None, "sp2_4"):
+    # axes: weights (dense vs sp2_4) x KV layout (dense slots vs paged)
+    for scheme, layout in ((None, "dense"), ("sp2_4", "dense"),
+                           ("sp2_4", "paged")):
+        tag = f"{scheme or 'dense'}/{layout}"
         eng = ServeEngine(params, cfg, batch_slots=4, max_seq=64,
-                          quantize=scheme, rt=rt)
+                          quantize=scheme, rt=rt, kv_layout=layout)
         t0 = time.time()
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p,
@@ -56,16 +57,27 @@ def main(argv=None):
         done = eng.run()
         dt = time.time() - t0
         n_tok = sum(len(r.output) for r in done)
-        results[scheme or "dense"] = {r.rid: r.output for r in done}
-        print(f"[serve_llm] {scheme or 'dense':6s}: {n_tok} tokens "
-              f"in {dt:.2f}s ({n_tok/dt:.0f} tok/s)")
+        results[tag] = {r.rid: r.output for r in done}
+        m = eng.metrics()
+        extra = (f" pages {m['n_pages']}x{m['page_size']} "
+                 f"occ {m['occupancy_mean']:.2f}"
+                 if layout == "paged" else "")
+        print(f"[serve_llm] {tag:12s}: {n_tok} tokens in {dt:.2f}s "
+              f"({n_tok / dt:.0f} tok/s) peak KV "
+              f"{m['peak_kv_bytes'] / 2**10:.0f} KiB{extra}")
 
-    # agreement between dense and 4-bit serving
-    agree = np.mean([
-        np.mean(np.array(results["dense"][i])
-                == np.array(results["sp2_4"][i]))
+    # agreement between dense and 4-bit serving (weights axis)
+    agree_q = np.mean([
+        np.mean(np.array(results["dense/dense"][i])
+                == np.array(results["sp2_4/dense"][i]))
         for i in range(args.requests)])
-    print(f"[serve_llm] dense vs sp2_4 greedy-token agreement: {agree:.2f}")
+    # agreement between dense-slot and paged KV (layout axis; exact)
+    agree_p = np.mean([
+        results["sp2_4/dense"][i] == results["sp2_4/paged"][i]
+        for i in range(args.requests)])
+    print(f"[serve_llm] dense vs sp2_4 greedy-token agreement: {agree_q:.2f}")
+    print(f"[serve_llm] dense vs paged KV exact-output agreement: "
+          f"{agree_p:.2f}")
     return results
 
 

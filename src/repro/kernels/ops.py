@@ -23,9 +23,11 @@ from repro.runtime import planner, registry
 
 from . import ref as ref_impl
 from .flash_attention import flash_attention_pallas
+from .paged_attention import paged_attention_pallas
 from .spx_matmul import spx_matmul_pallas
 
-__all__ = ["spx_matmul", "flash_attention", "resolve_impl"]
+__all__ = ["spx_matmul", "flash_attention", "paged_attention",
+           "resolve_impl"]
 
 
 def _on_tpu() -> bool:
@@ -99,7 +101,11 @@ def spx_matmul(x: jax.Array, qt: QuantizedTensor, *, impl: str = "auto",
                                       packed=qt.packed, out_dtype=out_dtype)
         return out.reshape(*lead, n_dim)
     if entry.impl == "pallas" and planner.autotune_enabled():
-        key = ("spx_matmul", m, k_dim, n_dim, qt.bits, qt.packed)
+        # dtype is part of the key: load time and VMEM fit depend on the
+        # activation byte width, so an f32-tuned winner must not be reused
+        # for a shape-identical bf16 call
+        key = ("spx_matmul", m, k_dim, n_dim, qt.bits, qt.packed,
+               x.dtype.itemsize)
         measured = planner.measured_plan(key)
         if measured is not None:
             # shape keys are concrete even at trace time, so a winner
@@ -188,3 +194,49 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         return ref_impl.attention_ref(qf, kf, vf,
                                       causal=causal).reshape(q.shape)
     return entry.fn(qf, kf, vf, causal=causal, plan=plan).reshape(q.shape)
+
+
+# ---------------------------------------------------------------------------
+# paged_attention: single-token decode over the paged KV cache — registered
+# impls share the signature fn(q4, k_pages, v_pages, block_table, ctx_len)
+# with q4: (B, Hkv, rep, dh)
+# ---------------------------------------------------------------------------
+
+@registry.register("paged_attention", "ref",
+                   priority=registry.PRIORITY_REFERENCE)
+def _paged_attention_ref(q4, k_pages, v_pages, block_table, ctx_len):
+    return ref_impl.paged_attention_ref(q4, k_pages, v_pages, block_table,
+                                        ctx_len)
+
+
+registry.register("paged_attention", "pallas",
+                  priority=registry.PRIORITY_ACCELERATOR,
+                  available=_on_tpu)(
+    functools.partial(paged_attention_pallas, interpret=False))
+registry.register("paged_attention", "interpret",
+                  priority=registry.PRIORITY_DEBUG)(
+    functools.partial(paged_attention_pallas, interpret=True))
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_table: jax.Array, ctx_len: jax.Array, *,
+                    impl: str = "auto") -> jax.Array:
+    """Decode attention of one query token per sequence against its paged
+    KV context.
+
+    q: (B, Hq, dh); k_pages/v_pages: (n_pages, Hkv, page_size, dh) —
+    physical page pools shared by all sequences; block_table:
+    (B, max_pages) int32 physical page per logical page; ctx_len: (B,)
+    int32 — positions < ctx_len attended (0 = inactive row, output zeros).
+    Returns (B, Hq, dh). Page geometry is chosen at pool-allocation time
+    via planner.plan_kv_pages, not per call.
+    """
+    b, hq, dh = q.shape
+    hkv = k_pages.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    q4 = q.reshape(b, hkv, hq // hkv, dh)
+    entry = registry.resolve("paged_attention", impl)
+    out = entry.fn(q4, k_pages, v_pages,
+                   jnp.asarray(block_table, jnp.int32),
+                   jnp.asarray(ctx_len, jnp.int32))
+    return out.reshape(b, hq, dh)

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: single-token decode attention over a paged KV cache.
+
+Serving's decode step is the paper's §3.1 pipeline with a twist: the K/V
+"matrix" is no longer contiguous — it is scattered across fixed-size pages
+owned by the sequence (see serving/kv_cache.py). The block table is a
+*scalar-prefetch* argument (pltpu.PrefetchScalarGridSpec), so the physical
+page index is known to the DMA engine before the grid step runs: the
+gather happens in the BlockSpec index_map, and the inner loop is the same
+double-buffered stream-pages-while-MXU-works pipeline as flash attention —
+one (K, V) page pair in flight per (sequence, KV head) while the current
+page's QK^T/PV runs, with running (m, l) softmax statistics in VMEM
+scratch.
+
+Grid: (B, Hkv, max_pages), pages innermost. GQA is handled by blocking the
+query as (rep, dh) per KV head — the ``rep`` query heads that share a KV
+head ride in one block and reuse the streamed page. Pages past a
+sequence's context length are skipped (pl.when), and positions beyond
+``ctx_len`` inside the last page are masked; unused block-table slots
+point at page 0, whose DMA is wasted but whose values are never read.
+
+Page size comes from ``runtime.planner.plan_kv_pages`` — the same
+VMEM-budget model the matmul tiles use.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.compat import pallas_compiler_params
+
+__all__ = ["paged_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(bt_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, scale: float, page_size: int, n_logical: int,
+            out_dtype):
+    del bt_ref                    # consumed by the BlockSpec index maps
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = ctx_ref[b]
+
+    @pl.when(j * page_size < ctx)
+    def _page():
+        q = q_ref[0, 0]                    # (rep, dh)
+        k = k_ref[0, 0]                    # (page_size, dh)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rep = q.shape[0]
+        pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (rep, page_size), 1)
+        s = jnp.where(pos < ctx, s, _NEG_INF)
+
+        m_prev = m_ref[...]                # (rep, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)             # (rep, page_size)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_logical - 1)
+    def _finalize():
+        # ctx == 0 rows (inactive slots) never ran _page: l == 0, out == 0
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def paged_attention_pallas(q, k_pages, v_pages, block_table, ctx_len, *,
+                           out_dtype=None, interpret: bool = False):
+    """q: (B, Hkv, rep, dh); k_pages/v_pages: (n_pages, Hkv, page_size, dh);
+    block_table: (B, max_pages) int32; ctx_len: (B,) int32 — positions
+    < ctx_len are attended. Returns (B, Hkv, rep, dh)."""
+    b, hkv, rep, dh = q.shape
+    _, _, page_size, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    out_dtype = out_dtype or q.dtype
+    scale = 1.0 / (dh ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,             # block_table, ctx_len
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, dh),
+                         lambda bb, h, j, bt, ctx: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, dh),
+                         lambda bb, h, j, bt, ctx: (bt[bb, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, dh),
+                         lambda bb, h, j, bt, ctx: (bt[bb, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, dh),
+                               lambda bb, h, j, bt, ctx: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),      # running max m
+            pltpu.VMEM((rep, 1), jnp.float32),      # running denom l
+            pltpu.VMEM((rep, dh), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, page_size=page_size,
+                          n_logical=max_pages, out_dtype=out_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, dh), out_dtype),
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, ctx_len, q, k_pages, v_pages)

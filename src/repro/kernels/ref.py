@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.core import spx
 
-__all__ = ["spx_matmul_ref", "attention_ref"]
+__all__ = ["spx_matmul_ref", "attention_ref", "paged_attention_ref"]
 
 
 def spx_matmul_ref(x, codes, scale, lut, *, packed: bool, out_dtype=None):
@@ -25,6 +25,44 @@ def spx_matmul_ref(x, codes, scale, lut, *, packed: bool, out_dtype=None):
         x, w.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     return (acc * scale).astype(out_dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, ctx_len, *,
+                        out_dtype=None):
+    """Single-token decode attention over a paged KV cache.
+
+    q: (B, Hkv, rep, dh) — query heads grouped under their KV head;
+    k_pages/v_pages: (n_pages, Hkv, page_size, dh) physical page pools;
+    block_table: (B, max_pages) int32 physical page per logical page;
+    ctx_len: (B,) int32 — tokens attendable (positions < ctx_len).
+    Returns (B, Hkv, rep, dh).
+
+    Gathers this sequence's pages into a contiguous view and runs a plain
+    max-shifted softmax in f32 — the oracle the Pallas kernel's online
+    softmax must match.
+    """
+    out_dtype = out_dtype or q.dtype
+    b, hkv, rep, dh = q.shape
+    ps = k_pages.shape[2]
+    max_pages = block_table.shape[1]
+    s_max = max_pages * ps
+    # gather: (B, max_pages, Hkv, ps, dh) -> (B, Hkv, S, dh)
+    k = jnp.moveaxis(k_pages[block_table], 2, 1).reshape(b, hkv, s_max, dh)
+    v = jnp.moveaxis(v_pages[block_table], 2, 1).reshape(b, hkv, s_max, dh)
+    s = jnp.einsum("bhrd,bhkd->bhrk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    pos = jnp.arange(s_max)
+    s = jnp.where(pos[None, None, None, :] < ctx_len[:, None, None, None],
+                  s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhrk,bhkd->bhrd", p, v.astype(jnp.float32))
+    o = o / jnp.maximum(l, 1e-30)
+    # ctx == 0 rows (inactive slots): everything is masked and the shifted
+    # softmax degenerates to a mean — force the kernel's all-zero output
+    o = jnp.where(ctx_len[:, None, None, None] > 0, o, 0.0)
+    return o.astype(out_dtype)
 
 
 def attention_ref(q, k, v, *, causal: bool = True, out_dtype=None):

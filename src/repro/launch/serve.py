@@ -1,12 +1,17 @@
 """Serving driver: spin up the batched engine with SPx-quantized weights and
-run a synthetic request workload, reporting latency/throughput.
+run a synthetic request workload, reporting latency/throughput/occupancy.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --requests 16 --scheme sp2_4
+      --requests 16 --scheme sp2_4 --kv-layout paged
+
+Env knobs that reach serving: REPRO_PAGE_SIZE (tokens per KV page),
+REPRO_PREFILL_CHUNK (chunked-prefill length), REPRO_BLOCKS_* /
+REPRO_AUTOTUNE (kernel tiles) — see docs/SERVING.md.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -28,6 +33,14 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--scheme", default="sp2_4",
                     help="SPx scheme for weights; 'none' = dense bf16")
+    ap.add_argument("--kv-layout", default="auto",
+                    choices=("auto", "paged", "dense"),
+                    help="paged = block-table KV pool + chunked prefill")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page (default: planner-chosen)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="KV pool size in pages (default: dense-equivalent)")
+    ap.add_argument("--prefill-chunk", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -41,7 +54,10 @@ def main(argv=None):
     scheme = None if args.scheme == "none" else args.scheme
     eng = ServeEngine(params, cfg, batch_slots=args.slots,
                       max_seq=args.max_seq, quantize=scheme,
-                      rt=Runtime(impl="auto", q_chunk=256))
+                      rt=Runtime(impl="auto", q_chunk=256),
+                      kv_layout=args.kv_layout, page_size=args.page_size,
+                      pool_pages=args.pool_pages,
+                      prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -54,10 +70,17 @@ def main(argv=None):
     done = eng.run()
     dt = time.time() - t0
     n_tok = sum(len(r.output) for r in done)
-    ttfts = [r.t_first_token - r.t_enqueue for r in done]
+    m = eng.metrics()
     print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s), median TTFT {np.median(ttfts)*1e3:.0f}ms"
-          f" scheme={scheme}")
+          f"({n_tok / dt:.1f} tok/s), median TTFT {m['ttft_p50_ms']:.0f}ms "
+          f"scheme={scheme} layout={m['kv_layout']}")
+    if m["kv_layout"] == "paged":
+        print(f"[serve] pages: {m['n_pages']} x {m['page_size']} tok, "
+              f"occupancy mean {m['occupancy_mean']:.2f} / "
+              f"peak {m['occupancy_peak']:.2f}, "
+              f"peak KV {m['peak_kv_bytes'] / 2**20:.2f} MiB, "
+              f"denials {m['admission_denials']}")
+    print("[serve] metrics: " + json.dumps(m, sort_keys=True))
     return done
 
 

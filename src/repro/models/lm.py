@@ -19,11 +19,12 @@ from repro.configs.base import ArchConfig
 from repro.nn.layers import (dense_apply, dense_init, embedding_apply,
                              embedding_init, norm_apply, norm_init)
 from repro.runtime import Runtime
-from repro.nn.transformer import (slot_init_cache, stack_apply, stack_decode,
+from repro.nn.transformer import (slot_init_cache, slot_init_paged_cache,
+                                  stack_apply, stack_decode, stack_paged,
                                   stack_prefill, stack_init)
 
 __all__ = ["lm_init", "lm_loss", "lm_logits", "lm_prefill", "lm_decode_step",
-           "init_caches", "chunked_ce"]
+           "init_caches", "paged_init_caches", "lm_paged_step", "chunked_ce"]
 
 LOSS_CHUNK = 256
 AUX_WEIGHT = 0.01
@@ -179,4 +180,37 @@ def lm_decode_step(params, token, pos, caches, cfg: ArchConfig, rt: Runtime):
     h, new_caches = stack_decode(params["stack"], x, pos, cfg, rt, caches)
     h = norm_apply(cfg.norm, params["final_norm"], h)
     logits = jnp.dot(h[:, 0], _head_w(params, cfg).astype(h.dtype))
+    return logits, new_caches
+
+
+# -- paged serving (docs/SERVING.md) ----------------------------------------
+
+def paged_init_caches(cfg: ArchConfig, n_pages: int, page_size: int,
+                      dtype=jnp.bfloat16):
+    """Physical KV page pools for every slot in the pattern. Attention-only
+    patterns (raises NotImplementedError otherwise — SSM state has nothing
+    to page; serve those with the dense layout)."""
+    return [slot_init_paged_cache(slot, cfg, n_pages, page_size, dtype)
+            for slot in cfg.pattern]
+
+
+def lm_paged_step(params, tokens, ctx_len, block_table, n_valid, caches,
+                  cfg: ArchConfig, rt: Runtime):
+    """One paged engine step: run the next C tokens of each sequence —
+    a prefill chunk (C > 1) or a decode step (C == 1) — against the paged
+    KV cache.
+
+    tokens: (B, C) int32 (rows may be padded past ``n_valid``);
+    ctx_len: (B,) int32 tokens already in the pages; block_table:
+    (B, max_pages) int32; n_valid: (B,) int32 valid tokens in this chunk
+    (0 = inactive row). Returns (logits (B, V) at each row's last valid
+    position, new_caches).
+    """
+    x = embedding_apply(params["embed"], tokens)
+    h, new_caches = stack_paged(params["stack"], x, ctx_len, block_table,
+                                n_valid, cfg, rt, caches)
+    h = norm_apply(cfg.norm, params["final_norm"], h)
+    last = jnp.clip(n_valid - 1, 0, tokens.shape[1] - 1)          # (B,)
+    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+    logits = jnp.dot(h_last, _head_w(params, cfg).astype(h.dtype))
     return logits, new_caches

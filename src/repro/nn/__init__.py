@@ -1,18 +1,20 @@
-from .layers import (Runtime, dense_apply, dense_init, embedding_apply,
+from .layers import (dense_apply, dense_init, embedding_apply,
                      embedding_init, layernorm_apply, layernorm_init,
                      norm_apply, norm_init, param_count, quantize_params,
                      rmsnorm_apply, rmsnorm_init)
 from .mlp import mlp_apply, mlp_init
 from .moe import moe_apply, moe_init
 from .rotary import apply_mrope, apply_rope
-from .transformer import (slot_init_cache, stack_apply, stack_decode,
-                          stack_init, stack_prefill)
+from .transformer import (slot_init_cache, slot_init_paged_cache,
+                          stack_apply, stack_decode, stack_init,
+                          stack_paged, stack_prefill)
 
 __all__ = [
-    "Runtime", "apply_mrope", "apply_rope", "dense_apply", "dense_init",
+    "apply_mrope", "apply_rope", "dense_apply", "dense_init",
     "embedding_apply", "embedding_init", "layernorm_apply", "layernorm_init",
     "mlp_apply", "mlp_init", "moe_apply", "moe_init", "norm_apply",
     "norm_init", "param_count", "quantize_params", "rmsnorm_apply",
-    "rmsnorm_init", "slot_init_cache", "stack_apply", "stack_decode",
-    "stack_init", "stack_prefill",
+    "rmsnorm_init", "slot_init_cache", "slot_init_paged_cache",
+    "stack_apply", "stack_decode", "stack_init", "stack_paged",
+    "stack_prefill",
 ]

@@ -33,7 +33,8 @@ from .layers import dense_apply, dense_init
 from .rotary import apply_mrope, apply_rope
 
 __all__ = ["attn_init", "attn_apply_dense", "attention_core",
-           "decode_attention", "attn_decode_step"]
+           "decode_attention", "attn_decode_step", "paged_kv_write",
+           "attn_paged_step"]
 
 _NEG = -1e30
 
@@ -374,6 +375,107 @@ def _n_axes(mesh, axes) -> int:
     for a in axes:
         n *= dict(mesh.shape)[a]
     return n
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: chunked prefill + paged decode (serving — docs/SERVING.md)
+# ---------------------------------------------------------------------------
+
+def paged_kv_write(k_pages, v_pages, k_new, v_new, block_table, positions,
+                   valid):
+    """Scatter a chunk of new K/V rows into the physical page pools.
+
+    k_pages/v_pages: (n_pages, Hkv, page_size, dh); k_new/v_new:
+    (B, C, Hkv, dh); block_table: (B, max_pages) int32; positions: (B, C)
+    absolute token positions; valid: (B, C) bool — False rows (chunk
+    padding, inactive slots) are dropped via an out-of-range scatter index
+    instead of a masked read-modify-write.
+    """
+    n_pages, hkv, ps, dh = k_pages.shape
+    logical = positions // ps                            # (B, C)
+    phys = jnp.take_along_axis(block_table,
+                               jnp.clip(logical, 0,
+                                        block_table.shape[1] - 1), axis=1)
+    phys = jnp.where(valid, phys, n_pages)               # OOB -> dropped
+    off = positions % ps
+    flat_p = phys.reshape(-1)
+    flat_o = off.reshape(-1)
+    k_flat = k_new.reshape(-1, hkv, dh).astype(k_pages.dtype)
+    v_flat = v_new.reshape(-1, hkv, dh).astype(v_pages.dtype)
+    k_pages = k_pages.at[flat_p, :, flat_o, :].set(k_flat, mode="drop")
+    v_pages = v_pages.at[flat_p, :, flat_o, :].set(v_flat, mode="drop")
+    return k_pages, v_pages
+
+
+def _paged_chunk_attention(q, k_pages, v_pages, block_table, positions,
+                           attend_len):
+    """Attention of a C-token chunk against the full paged context
+    (including the chunk itself, already written to the pages).
+
+    q: (B, Hq, C, dh); positions: (B, C) absolute query positions;
+    attend_len: (B,) total attendable tokens. Gathers this sequence's
+    pages into a contiguous view — prefill is compute-bound, so the
+    gather's bytes are amortized; the single-token hot path goes through
+    the paged-attention kernel instead. Returns (B, Hq, C, dh).
+    """
+    b, hq, c, dh = q.shape
+    hkv = k_pages.shape[1]
+    ps = k_pages.shape[2]
+    s_max = block_table.shape[1] * ps
+    rep = hq // hkv
+    k = jnp.moveaxis(k_pages[block_table], 2, 1).reshape(b, hkv, s_max, dh)
+    v = jnp.moveaxis(v_pages[block_table], 2, 1).reshape(b, hkv, s_max, dh)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    kv_pos = jnp.arange(s_max)
+    mask = ((kv_pos[None, None, :] <= positions[:, :, None])
+            & (kv_pos[None, None, :] < attend_len[:, None, None]))
+    s = jnp.where(mask[:, None], s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return (o / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+def attn_paged_step(p: dict, x: jax.Array, ctx_len: jax.Array,
+                    block_table: jax.Array, cache: dict, *, n_heads: int,
+                    n_kv_heads: int, head_dim: int, n_valid: jax.Array,
+                    rope_theta: float = 10000.0, rt: Runtime):
+    """Attention sublayer over the paged KV cache — one code path for both
+    chunked prefill (C > 1) and decode (C == 1, dispatched to the
+    paged-attention kernel via the registry).
+
+    x: (B, C, D) — the next C tokens of each sequence; ctx_len: (B,) int32
+    tokens already in the pages; n_valid: (B,) int32 valid tokens in this
+    chunk (< C for ragged tails / inactive rows — invalid tokens are
+    neither written nor trusted); cache: {"kp", "vp"} physical pools.
+    Returns (y (B, C, D), new_cache).
+    """
+    b, c, _ = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, rt)
+    positions = ctx_len[:, None] + jnp.arange(c, dtype=jnp.int32)   # (B, C)
+    q, k = _apply_positional(q, k, positions, rope_theta, None)
+    valid = jnp.arange(c)[None, :] < n_valid[:, None]               # (B, C)
+    kp, vp = paged_kv_write(cache["kp"], cache["vp"], k, v, block_table,
+                            positions, valid)
+    attend_len = ctx_len + n_valid
+    if c == 1:
+        out = ops.paged_attention(q[:, 0].reshape(b, n_heads, head_dim),
+                                  kp, vp, block_table, attend_len,
+                                  impl=rt.impl)
+        o = out[:, None]                                 # (B, 1, Hq*dh)->..
+        o = o.reshape(b, 1, n_heads * head_dim)
+    else:
+        qh = jnp.swapaxes(q, 1, 2)                       # (B, Hq, C, dh)
+        o = _paged_chunk_attention(qh, kp, vp, block_table, positions,
+                                   attend_len)
+        o = jnp.swapaxes(o, 1, 2).reshape(b, c, n_heads * head_dim)
+    y = dense_apply(p["wo"], o, rt)
+    return y, dict(cache, kp=kp, vp=vp)
 
 
 def attn_decode_step(p: dict, x: jax.Array, pos: jax.Array, kv_cache: tuple, *,

@@ -8,20 +8,19 @@ quantized matmul (`repro.kernels.ops.spx_matmul`).
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.quantized import QuantizedTensor
 from repro.kernels import ops
-# Deprecation shim (this PR only): Runtime moved to repro.runtime.context —
-# a frozen, hashable dataclass that is a legal static jit argument. Import
-# it from ``repro.runtime`` going forward.
-from repro.runtime.context import Runtime
+
+if TYPE_CHECKING:                 # annotations only — import Runtime from
+    from repro.runtime import Runtime   # repro.runtime, not this module
 
 __all__ = [
-    "Runtime", "dense_init", "dense_apply", "embedding_init",
+    "dense_init", "dense_apply", "embedding_init",
     "embedding_apply", "rmsnorm_init", "rmsnorm_apply", "layernorm_init",
     "layernorm_apply", "norm_init", "norm_apply", "quantize_params",
     "param_count", "opt_barrier",

@@ -24,13 +24,15 @@ from repro.configs.base import ArchConfig
 from repro.runtime import Runtime
 
 from . import ssm
-from .attention import attn_apply_dense, attn_decode_step, attn_init
+from .attention import (attn_apply_dense, attn_decode_step, attn_init,
+                        attn_paged_step)
 from .layers import norm_apply, norm_init, opt_barrier
 from .mlp import mlp_apply, mlp_init
 from .moe import moe_apply, moe_init
 
 __all__ = ["stack_init", "stack_apply", "stack_prefill", "stack_decode",
-           "slot_init_cache", "SLOT_KINDS"]
+           "stack_paged", "slot_init_cache", "slot_init_paged_cache",
+           "SLOT_KINDS"]
 
 SLOT_KINDS = ("attn", "xdec", "mamba", "mlstm", "slstm")
 
@@ -115,15 +117,31 @@ def _cross_kv(p_attn: dict, enc_out: jax.Array, n_kv_heads: int,
 
 def _slot_apply(slot: str, p: dict, x, positions, cfg: ArchConfig,
                 rt: Runtime, *, mode: str, cache=None, pos=None,
-                enc_out=None, causal: bool = True):
-    """mode: 'train' | 'prefill' | 'decode'. Returns (x, new_cache, aux)."""
+                enc_out=None, causal: bool = True, paged_ctx=None):
+    """mode: 'train' | 'prefill' | 'decode' | 'paged'. Returns
+    (x, new_cache, aux). Paged mode (serving: chunked prefill + paged
+    decode through one path) takes ``paged_ctx = (ctx_len, block_table,
+    n_valid)`` and is attention-only — SSM/hybrid/enc-dec patterns keep
+    the dense cache layout (their state is O(1) per sequence, there is
+    nothing to page)."""
     mixer, ffn = _parse_slot(slot)
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
 
     h = norm_apply(cfg.norm, p["norm1"], x)
+    if mode == "paged" and mixer != "attn":
+        raise NotImplementedError(
+            f"paged KV serving supports attention-only patterns; "
+            f"got slot {slot!r} (use kv_layout='dense')")
     if mixer in ("attn", "xdec"):
-        if mode == "decode":
+        if mode == "paged":
+            ctx_len, block_table, n_valid = paged_ctx
+            y, new_cache = attn_paged_step(
+                p["attn"], h, ctx_len, block_table, cache,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.dh, n_valid=n_valid,
+                rope_theta=cfg.rope_theta, rt=rt)
+        elif mode == "decode":
             y, kv = attn_decode_step(
                 p["attn"], h, pos, (cache["k"], cache["v"]),
                 n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
@@ -248,11 +266,12 @@ def _sp_constrain(x, rt: Runtime):
 
 
 def _period_body(carry, xs, *, cfg: ArchConfig, rt: Runtime, mode: str,
-                 positions=None, enc_out=None, causal: bool = True):
+                 positions=None, enc_out=None, causal: bool = True,
+                 paged_ctx=None):
     if mode == "decode":
         x, pos, aux = carry
         slot_params, caches = xs
-    elif mode == "prefill":
+    elif mode in ("prefill", "paged"):
         x, aux = carry
         slot_params, caches = xs
         pos = None
@@ -273,7 +292,7 @@ def _period_body(carry, xs, *, cfg: ArchConfig, rt: Runtime, mode: str,
                 xx = opt_barrier(xx)
             return _slot_apply(_slot, sp, xx, positions, cfg, rt, mode=mode,
                                cache=_cache, pos=pos, enc_out=enc_out,
-                               causal=causal)
+                               causal=causal, paged_ctx=paged_ctx)
         if mode == "train" and rt.remat != "none" and len(cfg.pattern) > 1:
             # hierarchical remat: the period body is already checkpointed;
             # checkpointing each slot too keeps the backward's recompute
@@ -287,7 +306,7 @@ def _period_body(carry, xs, *, cfg: ArchConfig, rt: Runtime, mode: str,
         x = _sp_constrain(x, rt)
     if mode == "decode":
         return (x, pos, aux), new_caches
-    if mode == "prefill":
+    if mode in ("prefill", "paged"):
         return (x, aux), new_caches
     return (x, aux), None
 
@@ -332,6 +351,22 @@ def stack_decode(params: dict, x: jax.Array, pos, cfg: ArchConfig,
         return _period_body(carry, xs, cfg=cfg, rt=rt, mode="decode")
     (x, _, aux), new_caches = jax.lax.scan(
         body, (x, pos, jnp.zeros((), jnp.float32)),
+        (tuple(params["slots"]), tuple(caches)),
+        unroll=True if rt.unroll else 1)
+    return x, new_caches
+
+
+def stack_paged(params: dict, x: jax.Array, ctx_len, block_table, n_valid,
+                cfg: ArchConfig, rt: Runtime, caches):
+    """C-token step over the paged KV cache — chunked prefill (C > 1) and
+    paged decode (C == 1) share this path. x: (B, C, D); ctx_len/n_valid:
+    (B,) int32; block_table: (B, max_pages) int32; caches: per-slot
+    {"kp", "vp"} pools stacked over periods. Returns (x, new_caches)."""
+    def body(carry, xs):
+        return _period_body(carry, xs, cfg=cfg, rt=rt, mode="paged",
+                            paged_ctx=(ctx_len, block_table, n_valid))
+    (x, _), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
         (tuple(params["slots"]), tuple(caches)),
         unroll=True if rt.unroll else 1)
     return x, new_caches
@@ -398,3 +433,19 @@ def slot_init_cache(slot: str, cfg: ArchConfig, batch: int, max_seq: int,
                 for k in ("c", "n", "m", "h")}
         return stackP(base)
     raise ValueError(slot)
+
+
+def slot_init_paged_cache(slot: str, cfg: ArchConfig, n_pages: int,
+                          page_size: int, dtype=jnp.bfloat16,
+                          n_periods: int | None = None):
+    """Physical K/V page pools for one attention slot, stacked over periods:
+    {"kp", "vp"} each (P, n_pages, Hkv, page_size, dh). The pool is shared
+    by every sequence — ownership lives in the host-side PagePool
+    (serving/kv_cache.py), the device only ever sees block tables."""
+    mixer, _ = _parse_slot(slot)
+    if mixer != "attn":
+        raise NotImplementedError(
+            f"paged KV cache supports 'attn' slots only, got {slot!r}")
+    P = n_periods if n_periods is not None else cfg.n_periods
+    kp = jnp.zeros((P, n_pages, cfg.n_kv_heads, page_size, cfg.dh), dtype)
+    return {"kp": kp, "vp": kp + 0}

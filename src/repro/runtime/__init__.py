@@ -15,13 +15,14 @@ Three pieces, co-designed the way RedMulE/FantastIC4 argue the win comes:
 """
 from . import planner, registry
 from .context import Runtime
-from .planner import (AttentionBlocks, MatmulBlocks, plan_attention,
-                      plan_matmul)
+from .planner import (AttentionBlocks, KVPagePlan, MatmulBlocks,
+                      plan_attention, plan_kv_pages, plan_matmul)
 from .registry import (KernelEntry, KernelUnavailable, available_impls,
                        register, resolve)
 
 __all__ = [
     "Runtime", "planner", "registry", "MatmulBlocks", "AttentionBlocks",
-    "plan_matmul", "plan_attention", "KernelEntry", "KernelUnavailable",
-    "available_impls", "register", "resolve",
+    "KVPagePlan", "plan_matmul", "plan_attention", "plan_kv_pages",
+    "KernelEntry", "KernelUnavailable", "available_impls", "register",
+    "resolve",
 ]

@@ -1,4 +1,5 @@
-"""Analytical block planner: per-shape (bm, bn, bk) / (bq, bkv) selection.
+"""Analytical block planner: per-shape (bm, bn, bk) / (bq, bkv) / KV-page
+selection.
 
 The paper's §3.1 soundness condition — loading must stay ahead of compute —
 is evaluated analytically by ``core/pipeline.plan_matmul_blocks``; this
@@ -15,9 +16,25 @@ instead of the old one-size-fits-all ``DEFAULT_BM/BN/BK`` constants:
     falls back to the jnp reference path — exactly the old behavior, now in
     one place.
 
-Overrides:
+The same VMEM-budget model sizes the serving KV pages (``plan_kv_pages``):
+a page is the unit the paged-attention decode kernel streams HBM→VMEM per
+grid step, so it is chosen like any other tile — double-buffered K+V page
+pair under ``VMEM_BUDGET_FRACTION``, floored at the dtype's sublane tile.
+
+All sizes in this module are **element counts** (tokens, rows, columns)
+except fields and helpers explicitly suffixed ``_bytes``; activation /
+weight widths enter as ``act_bytes`` / ``weight_bits``.
+
+Caching: every ``plan_*`` entry point memoizes per concrete shape tuple via
+``functools.lru_cache`` — the first call per shape does the search, later
+calls (including every jit retrace) are dict hits. ``clear_plan_cache()``
+drops all cached plans and measured-autotune winners (tests use it when
+flipping env overrides).
+
+Environment overrides (read at call time, not import time):
   REPRO_BLOCKS_MATMUL="bm,bn,bk"  pin matmul blocks (divisibility checked)
   REPRO_BLOCKS_ATTN="bq,bkv"      pin attention blocks
+  REPRO_PAGE_SIZE=N               pin the KV page size (tokens per page)
   REPRO_AUTOTUNE=1                measured autotuning: ops wrappers time the
                                   top analytical candidates on the real
                                   kernel and cache the winner per shape
@@ -32,10 +49,10 @@ from typing import Callable, Optional
 from repro.core.pipeline import HwSpec, TPU_V5E, plan_matmul_blocks
 
 __all__ = [
-    "MatmulBlocks", "AttentionBlocks", "plan_matmul", "plan_attention",
-    "matmul_candidates", "autotune_enabled", "measured_best",
-    "measured_plan", "clear_plan_cache", "DEFAULT_BM",
-    "VMEM_BUDGET_FRACTION",
+    "MatmulBlocks", "AttentionBlocks", "KVPagePlan", "plan_matmul",
+    "plan_attention", "plan_kv_pages", "matmul_candidates",
+    "autotune_enabled", "measured_best", "measured_plan",
+    "clear_plan_cache", "DEFAULT_BM", "VMEM_BUDGET_FRACTION",
 ]
 
 # bm candidate ceiling for tiny-M problems (M is padded to the chosen bm,
@@ -69,6 +86,23 @@ class AttentionBlocks:
     vmem_bytes: int
 
 
+@dataclasses.dataclass(frozen=True)
+class KVPagePlan:
+    """Geometry for the paged KV cache (serving decode path).
+
+    page_size    tokens per page — the unit the paged-attention kernel
+                 streams per grid step AND the allocator's granularity
+    pipelined    §3.1 condition for the decode kernel's page loop
+    margin       compute/load ratio for one (K, V) page pair
+    vmem_bytes   kernel working set: double-buffered K+V page pair +
+                 q/acc/stats scratch, in bytes
+    """
+    page_size: int
+    pipelined: bool
+    margin: float
+    vmem_bytes: int
+
+
 def _divisors(dim: int, *, even: bool = False) -> tuple[int, ...]:
     out = tuple(c for c in _BLOCK_CANDIDATES
                 if c <= dim and dim % c == 0
@@ -88,7 +122,12 @@ def matmul_candidates(m: int, k: int, n: int, *,
                       packed: bool = False) -> tuple:
     """(bm, bn, bk) candidate tuples under the divisibility rules the
     Pallas wrapper needs: bn | n, bk | k (bn even when int4-packed); bm is
-    free (M is padded)."""
+    free (M is padded).
+
+    Units: ``m``/``k``/``n`` are matrix dims in elements; returned
+    candidates are tile dims in elements. Pure function, no caching —
+    callers (``_plan_matmul_cached``, the autotuner) cache downstream.
+    """
     bm_c = tuple(c for c in _BLOCK_CANDIDATES if c <= max(m, DEFAULT_BM))
     bn_c = _divisors(n, even=packed)
     bk_c = _divisors(k)
@@ -129,7 +168,16 @@ def plan_matmul(m: int, k: int, n: int, *, weight_bits: int = 16,
                 act_bytes: int = 2, packed: bool = False,
                 hw: HwSpec = TPU_V5E) -> Optional[MatmulBlocks]:
     """Blocks for x:(M,K) @ W:(K,N) with b-bit SPx weight codes, or None if
-    no legal blocking exists (caller falls back to the ref path)."""
+    no legal blocking exists (caller falls back to the ref path).
+
+    Units: ``m``/``k``/``n`` in elements; ``weight_bits`` per weight code
+    (4 or 8 for SPx, 16 for dense bf16); ``act_bytes`` per activation
+    element; ``MatmulBlocks.vmem_bytes`` is the kernel working set in
+    bytes. Cached per (m, k, n, weight_bits, act_bytes, packed, hw);
+    ``REPRO_BLOCKS_MATMUL="bm,bn,bk"`` pins the blocks (divisibility still
+    checked; returns None — i.e. ref fallback — when the pin is illegal
+    for this shape) and bypasses the cache.
+    """
     pinned = _env_override("REPRO_BLOCKS_MATMUL", 3)
     if pinned is not None:
         bm, bn, bk = pinned
@@ -167,7 +215,12 @@ def _plan_attention_cached(sq: int, skv: int, dh: int, act_bytes: int,
 def plan_attention(sq: int, skv: int, dh: int, *, act_bytes: int = 2,
                    hw: HwSpec = TPU_V5E) -> Optional[AttentionBlocks]:
     """(bq, bkv) for flash attention over (Sq, Skv, dh), or None when the
-    sequence dims admit no candidate blocking (ref fallback)."""
+    sequence dims admit no candidate blocking (ref fallback).
+
+    Units: ``sq``/``skv``/``dh`` are element counts; ``act_bytes`` is the
+    per-element width of Q/K/V. Cached per (sq, skv, dh, act_bytes, hw);
+    the ``REPRO_BLOCKS_ATTN`` override bypasses the cache entirely.
+    """
     pinned = _env_override("REPRO_BLOCKS_ATTN", 2)
     if pinned is not None:
         bq, bkv = pinned
@@ -178,6 +231,79 @@ def plan_attention(sq: int, skv: int, dh: int, *, act_bytes: int = 2,
 
 
 # ---------------------------------------------------------------------------
+# KV page sizing (serving)
+# ---------------------------------------------------------------------------
+
+#: tokens-per-page candidates, ascending — ties in the §3.1 score resolve
+#: to the SMALLEST page (least fragmentation waste per sequence tail)
+_PAGE_CANDIDATES = (8, 16, 32, 64, 128, 256)
+
+
+def _sublane_floor(act_bytes: int) -> int:
+    """Minimum second-to-last tile dim for the cache dtype (TPU tiling:
+    f32 -> 8, bf16 -> 16, int8 -> 32). Pages sit on the sublane axis of the
+    kernel's (page_size, dh) K/V blocks, so smaller pages than this would
+    be padded to a full tile anyway."""
+    return max(8, 32 // max(act_bytes, 1))
+
+
+@functools.lru_cache(maxsize=256)
+def _plan_kv_pages_cached(n_kv_heads: int, dh: int, rep: int,
+                          act_bytes: int, hw: HwSpec) -> KVPagePlan:
+    del n_kv_heads  # the kernel grids over KV heads; per-step cost is 1 head
+    best = None
+    best_key = None
+    for ps in _PAGE_CANDIDATES:
+        if ps < _sublane_floor(act_bytes):
+            continue
+        # per grid step: stream the next (K, V) page pair for one KV head
+        # while the MXU runs QK^T + PV (rep query heads) on the current one
+        t_load = 2 * ps * dh * act_bytes / hw.hbm_bw
+        t_compute = 4.0 * rep * ps * dh / hw.peak_bf16_flops
+        vmem = (2 * 2 * ps * dh * act_bytes      # double-buffered K+V pages
+                + rep * dh * act_bytes           # resident q
+                + rep * dh * 4 + 2 * rep * 4)    # f32 acc + (m, l) scratch
+        if vmem > hw.vmem_bytes * VMEM_BUDGET_FRACTION:
+            continue
+        margin = t_compute / max(t_load, 1e-30)
+        # NOTE: the margin is page-size-neutral (load and compute both scale
+        # linearly in page_size), so the score usually ties and the
+        # ascending iteration keeps the smallest legal page — exactly what
+        # fragmentation wants. The score still matters when VMEM excludes
+        # candidates or a future HwSpec breaks the linearity.
+        key = (t_load <= t_compute, margin)
+        if best is None or key > best_key:
+            best = KVPagePlan(ps, t_load <= t_compute, margin, int(vmem))
+            best_key = key
+    if best is None:                    # dh so large nothing fits: min tile
+        ps = _sublane_floor(act_bytes)
+        best = KVPagePlan(ps, False, 0.0, 0)
+    return best
+
+
+def plan_kv_pages(n_kv_heads: int, dh: int, *, rep: int = 1,
+                  act_bytes: int = 2, hw: HwSpec = TPU_V5E) -> KVPagePlan:
+    """Tokens-per-page for the paged KV cache.
+
+    Units: ``n_kv_heads``/``dh`` are element counts (the cache page is
+    ``page_size x dh`` elements per KV head); ``rep = Hq // Hkv`` is the
+    GQA expansion (query heads served per KV page); ``act_bytes`` is the
+    cache element width in bytes.
+
+    Cached per argument tuple (lru); ``REPRO_PAGE_SIZE=N`` pins the page
+    size, bypassing both the model and the cache. Always returns a plan —
+    there is no ref-fallback ``None`` here because any page size is legal
+    for the allocator; an unpipelined plan just means the decode kernel is
+    HBM-bound (which single-token decode always is: margin < 1 whenever
+    ``2 * rep * peak_flops_byte < 1``).
+    """
+    pinned = _env_override("REPRO_PAGE_SIZE", 1)
+    if pinned is not None:
+        return KVPagePlan(pinned[0], False, 0.0, 0)
+    return _plan_kv_pages_cached(n_kv_heads, dh, rep, act_bytes, hw)
+
+
+# ---------------------------------------------------------------------------
 # Measured autotuning (env/flag-gated)
 # ---------------------------------------------------------------------------
 
@@ -185,6 +311,8 @@ _MEASURED: dict = {}
 
 
 def autotune_enabled() -> bool:
+    """True when ``REPRO_AUTOTUNE`` is set to 1/true/measured. Read from
+    the environment on every call (no caching) so tests can flip it."""
     return os.environ.get("REPRO_AUTOTUNE", "").lower() in ("1", "true",
                                                             "measured")
 
@@ -192,7 +320,8 @@ def autotune_enabled() -> bool:
 def measured_plan(key):
     """Previously measured winner for this shape key, or None. Consulted at
     trace time too (shapes are concrete there), so a winner measured during
-    an eager warm-up call applies to every later jitted step."""
+    an eager warm-up call applies to every later jitted step. The measured
+    table is process-local and cleared by ``clear_plan_cache()``."""
     return _MEASURED.get(key)
 
 
@@ -222,6 +351,10 @@ def measured_best(key, plans, runner: Callable[[object], float]):
 
 
 def clear_plan_cache():
+    """Drop every cached plan: analytical matmul/attention/page plans AND
+    measured-autotune winners. Needed after changing a ``REPRO_*`` planner
+    env var mid-process — plans are cached per shape, not per environment."""
     _plan_matmul_cached.cache_clear()
     _plan_attention_cached.cache_clear()
+    _plan_kv_pages_cached.cache_clear()
     _MEASURED.clear()

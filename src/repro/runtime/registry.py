@@ -18,7 +18,9 @@ so the nn/ layers never re-derive "pallas on TPU, ref elsewhere" themselves.
 
 The built-in kernels live in ``repro.kernels.ops`` and register themselves
 at import; ``resolve`` imports that module lazily so the registry package
-itself stays dependency-free.
+itself stays dependency-free. Current built-in ops: ``spx_matmul``,
+``flash_attention``, ``paged_attention`` (serving decode over the paged KV
+cache — see docs/SERVING.md).
 """
 from __future__ import annotations
 
@@ -62,6 +64,10 @@ def register(op: str, impl: str, *, priority: int = 0,
 
     ``available`` is evaluated at resolve time (per backend), not at import:
     the pallas entries register everywhere but only resolve on TPU.
+    Registering invalidates the resolution cache, so a late registration
+    (e.g. a test stubbing an op) takes effect on the next ``resolve``.
+    ``priority`` only orders ``"auto"`` resolution — use the
+    ``PRIORITY_*`` tiers above rather than raw ints.
     """
     def deco(fn):
         _REGISTRY[(op, impl)] = KernelEntry(op, impl, fn, available, priority)
@@ -102,16 +108,29 @@ def _resolve_cached(op: str, impl: str, backend: str) -> KernelEntry:
 
 
 def resolve(op: str, impl: str = "auto") -> KernelEntry:
+    """Resolve ``(op, impl)`` to a registered entry.
+
+    Cached per (op, impl, backend) for the process lifetime — availability
+    predicates run once per backend, not per call, so layers may resolve
+    inside jitted code at zero cost. Raises ``KernelUnavailable`` for an
+    unknown impl (listing what exists) or when no registered impl's
+    availability predicate passes for ``"auto"``.
+    """
     _ensure_builtins()
     return _resolve_cached(op, impl, _backend())
 
 
 def available_impls(op: str) -> tuple[str, ...]:
+    """Impl names whose availability predicate passes right now, sorted.
+    Uncached — predicates are re-evaluated on every call (cheap; used for
+    error messages and diagnostics, not on hot paths)."""
     _ensure_builtins()
     return tuple(sorted(i for (o, i), e in _REGISTRY.items()
                         if o == op and e.available()))
 
 
 def registered_ops() -> tuple[str, ...]:
+    """All op names with at least one registered impl (available or not),
+    sorted. Uncached."""
     _ensure_builtins()
     return tuple(sorted({o for (o, _) in _REGISTRY}))

@@ -1,1 +1,5 @@
 from .engine import Request, ServeEngine
+from .kv_cache import PagePool, kv_bytes_per_token, pool_bytes
+
+__all__ = ["Request", "ServeEngine", "PagePool", "kv_bytes_per_token",
+           "pool_bytes"]

@@ -1,18 +1,32 @@
-"""Batched serving engine: continuous-batching slots over the compiled
-prefill/decode steps, with SPx-quantized weights (the paper's deployment
-mode). Single-host execution here; the distributed dry-run exercises the
-same step functions on the production meshes.
+"""Batched serving engine over the compiled step functions, with
+SPx-quantized weights (the paper's deployment mode). Single-host execution
+here; the distributed dry-run exercises the same step functions on the
+production meshes.
 
-Requests enter a queue; the engine packs up to ``batch_slots`` active
-sequences, prefills new arrivals (padded to the slot length), then decodes
-in lockstep — one logits row per active slot per step, greedy or
-temperature sampling. Finished sequences release their slot.
+Two KV layouts (docs/SERVING.md has the full lifecycle):
+
+* **paged** (default for attention-only patterns): the KV cache is a fixed
+  pool of pages (serving/kv_cache.py); admission is page-availability-based
+  — a request is admitted when the pool can cover its worst-case footprint,
+  otherwise it waits in the queue. Prompts stream through **chunked
+  prefill** (planner/env-sized chunks, one chunk per engine tick per slot,
+  interleaved with decode steps of already-running sequences), and decode
+  attends through the block table via the paged-attention kernel. Memory
+  scales with tokens in flight, not ``batch_slots x max_seq``.
+
+* **dense** (SSM/hybrid/enc-dec patterns, M-RoPE, quantized KV): the
+  original per-slot ``(B, Hkv, max_seq, dh)`` cache; prompts pad to the
+  slot length at admission and decode runs in lockstep.
+
+Both layouts produce identical greedy outputs (regression-tested); the
+engine exposes throughput/occupancy metrics either way via ``metrics()``.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,9 +35,16 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import lm as lm_mod
 from repro.nn.layers import quantize_params
-from repro.runtime import Runtime
+from repro.runtime import Runtime, planner
+from repro.serving.kv_cache import PagePool, kv_bytes_per_token
 
 __all__ = ["Request", "ServeEngine"]
+
+#: chunk length for chunked prefill when the caller doesn't pass one;
+#: REPRO_PREFILL_CHUNK=N overrides. Ragged final chunks are padded up to
+#: the next power of two so the engine compiles O(log chunk) variants,
+#: not one per prompt length.
+_DEFAULT_PREFILL_CHUNK = 32
 
 
 @dataclasses.dataclass
@@ -40,10 +61,18 @@ class Request:
     t_done: float = 0.0
 
 
+def _pad_pow2(n: int, cap: int) -> int:
+    """Smallest power of two >= n, capped (chunk-padding bucket)."""
+    return min(cap, 1 << max(0, (n - 1)).bit_length())
+
+
 class ServeEngine:
     def __init__(self, params, cfg: ArchConfig, *, batch_slots: int = 4,
                  max_seq: int = 256, quantize: str | None = "sp2_4",
-                 rt: Runtime | None = None, seed: int = 0):
+                 rt: Runtime | None = None, seed: int = 0,
+                 kv_layout: str = "auto", page_size: int | None = None,
+                 pool_pages: int | None = None,
+                 prefill_chunk: int | None = None):
         self.cfg = cfg
         self.rt = rt or Runtime(impl="auto", q_chunk=256)
         self.batch_slots = batch_slots
@@ -53,6 +82,37 @@ class ServeEngine:
         self.params = params
         self._key = jax.random.PRNGKey(seed)
 
+        if kv_layout == "auto":
+            kv_layout = "paged" if self._pageable() else "dense"
+        if kv_layout == "paged" and not self._pageable():
+            raise ValueError(
+                f"kv_layout='paged' needs an attention-only pattern without "
+                f"kv_quant/M-RoPE; {cfg.name} has pattern={cfg.pattern}")
+        self.kv_layout = kv_layout
+
+        self.slot_req: list[Optional[Request]] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int64)   # tokens in cache
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._occ_samples: list[float] = []
+        self._tokens_out = 0
+        self._steps = 0
+        self._wall = 0.0
+
+        if kv_layout == "paged":
+            self._init_paged(page_size, pool_pages, prefill_chunk)
+        else:
+            self._init_dense()
+
+    def _pageable(self) -> bool:
+        return (all(s.split("+")[0] == "attn" for s in self.cfg.pattern)
+                and not self.rt.kv_quant
+                and self.cfg.mrope_sections is None
+                and not self.cfg.enc_dec)
+
+    # -- layout-specific setup ----------------------------------------------
+
+    def _init_dense(self):
         # cfg and rt are frozen/hashable and ride as *static* jit arguments:
         # an engine whose Runtime is replaced by an equal-valued copy reuses
         # the compiled steps (no retrace — tests/test_runtime.py)
@@ -62,31 +122,259 @@ class ServeEngine:
         # lengths masked; logits of the last real token are picked host-side
         self._prefill_one = jax.jit(lm_mod.lm_prefill,
                                     static_argnums=(3, 4))
-        self.caches = lm_mod.init_caches(cfg, batch_slots, max_seq,
-                                         dtype=jnp.float32)
-        self.slot_req: list[Optional[Request]] = [None] * batch_slots
-        self.slot_pos = np.zeros(batch_slots, np.int64)
-        self.queue: list[Request] = []
-        self.finished: list[Request] = []
+        self.caches = lm_mod.init_caches(self.cfg, self.batch_slots,
+                                         self.max_seq, dtype=jnp.float32)
+
+    def _init_paged(self, page_size, pool_pages, prefill_chunk):
+        cfg = self.cfg
+        rep = cfg.n_heads // cfg.n_kv_heads
+        plan = planner.plan_kv_pages(cfg.n_kv_heads, cfg.dh, rep=rep,
+                                     act_bytes=4)
+        self.page_size = min(page_size or plan.page_size, self.max_seq)
+        self.pages_per_seq = -(-self.max_seq // self.page_size)
+        # default pool = the dense engine's worst case, so paged-vs-dense
+        # comparisons start from equal budgets; pass a smaller pool to get
+        # admission backpressure (tests/test_serving.py exercises this)
+        self.pool = PagePool(pool_pages
+                             or self.batch_slots * self.pages_per_seq,
+                             self.page_size)
+        self.prefill_chunk = (prefill_chunk
+                              or int(os.environ.get("REPRO_PREFILL_CHUNK",
+                                                    0))
+                              or _DEFAULT_PREFILL_CHUNK)
+        if self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk} "
+                "(check REPRO_PREFILL_CHUNK)")
+        self.caches = lm_mod.paged_init_caches(cfg, self.pool.n_pages,
+                                               self.page_size,
+                                               dtype=jnp.float32)
+        self._paged_step = jax.jit(lm_mod.lm_paged_step,
+                                   static_argnums=(6, 7),
+                                   donate_argnums=(5,))
+        self.block_tables = np.zeros(
+            (self.batch_slots, self.pages_per_seq), np.int32)
+        # per-slot prefill progress: tokens of the prompt already fed;
+        # -1 means the slot is decoding
+        self._fed = np.full(self.batch_slots, -1, np.int64)
 
     # -- public API ----------------------------------------------------------
 
+    @staticmethod
+    def _worst_case_tokens(req: Request) -> int:
+        """Tokens the sequence can ever hold — admission reserves this."""
+        return len(req.prompt) + req.max_new_tokens
+
     def submit(self, req: Request):
+        if len(req.prompt) < 1 or req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: needs a non-empty prompt and "
+                f"max_new_tokens >= 1 (got {len(req.prompt)}, "
+                f"{req.max_new_tokens})")
+        if self._worst_case_tokens(req) > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds "
+                f"max_seq={self.max_seq}")
+        in_flight = ({r.rid for r in self.queue}
+                     | {r.rid for r in self.slot_req if r is not None})
+        if req.rid in in_flight:
+            # rids key the page allocator AND every consumer's results
+            # dict; a duplicate would KeyError mid-run (paged) or
+            # silently overwrite another request's output (dense)
+            raise ValueError(f"request id {req.rid} already in flight")
+        if self.kv_layout == "paged":
+            need = self.pool.pages_for(self._worst_case_tokens(req))
+            if need > self.pool.n_pages:
+                # could never be admitted even against an empty pool —
+                # reject now instead of busy-spinning run() forever
+                raise ValueError(
+                    f"request {req.rid}: needs {need} pages but the pool "
+                    f"only has {self.pool.n_pages} in total")
         req.t_enqueue = time.time()
         self.queue.append(req)
 
     def run(self, max_steps: int = 10_000):
         """Drive until queue + slots drain (or step limit)."""
+        t0 = time.time()
         for _ in range(max_steps):
             if not self.queue and all(r is None for r in self.slot_req):
                 break
-            self._admit()
-            self._decode_step()
+            self._steps += 1
+            if self.kv_layout == "paged":
+                self._admit_paged()
+                self._prefill_tick()
+                self._decode_step_paged()
+                self._occ_samples.append(self.pool.stats.occupancy)
+            else:
+                self._admit_dense()
+                self._decode_step_dense()
+                self._occ_samples.append(
+                    sum(r is not None for r in self.slot_req)
+                    / self.batch_slots)
+        self._wall += time.time() - t0
         return self.finished
 
-    # -- internals -------------------------------------------------------------
+    def reset_metrics(self):
+        """Zero the throughput/latency/occupancy counters (compiled steps
+        and cache state are kept). Benchmarks call this between a warmup
+        pass — which pays all the jit compiles — and the measured pass."""
+        self.finished = []
+        self._occ_samples = []
+        self._tokens_out = 0
+        self._steps = 0
+        self._wall = 0.0
+        if self.kv_layout == "paged":
+            self.pool.stats.peak_pages_in_use = self.pool.stats.pages_in_use
+            self.pool.stats.admission_denials = 0
 
-    def _admit(self):
+    def metrics(self) -> dict:
+        """Throughput/latency/occupancy counters for the work so far."""
+        lat = [r.t_done - r.t_enqueue for r in self.finished]
+        ttft = [r.t_first_token - r.t_enqueue for r in self.finished]
+        per_tok = kv_bytes_per_token(self.cfg, 4)
+        if self.kv_layout == "paged":
+            peak_kv = (self.pool.stats.peak_pages_in_use * self.page_size
+                       * per_tok)
+            paged = {"page_size": self.page_size,
+                     "n_pages": self.pool.n_pages,
+                     "pages_per_seq": self.pages_per_seq,
+                     "admission_denials":
+                         self.pool.stats.admission_denials,
+                     "prefill_chunk": self.prefill_chunk}
+        else:
+            peak_kv = self.batch_slots * self.max_seq * per_tok
+            paged = {}
+        return {
+            "kv_layout": self.kv_layout,
+            "requests_finished": len(self.finished),
+            "tokens_generated": self._tokens_out,
+            "engine_steps": self._steps,
+            "wall_s": self._wall,
+            "tokens_per_s": self._tokens_out / self._wall
+            if self._wall else 0.0,
+            "ttft_p50_ms": 1e3 * float(np.median(ttft)) if ttft else 0.0,
+            "ttft_p95_ms": 1e3 * float(np.percentile(ttft, 95))
+            if ttft else 0.0,
+            "latency_p50_ms": 1e3 * float(np.median(lat)) if lat else 0.0,
+            "latency_p95_ms": 1e3 * float(np.percentile(lat, 95))
+            if lat else 0.0,
+            "occupancy_mean": float(np.mean(self._occ_samples))
+            if self._occ_samples else 0.0,
+            "occupancy_peak": float(np.max(self._occ_samples))
+            if self._occ_samples else 0.0,
+            "peak_kv_bytes": int(peak_kv),
+            **paged,
+        }
+
+    # -- paged internals -----------------------------------------------------
+
+    def _admit_paged(self):
+        """Admission is page-budget-based: the queue head is admitted when
+        a slot is free AND the pool covers its worst-case token footprint
+        (prompt + max_new, capped at max_seq — reserved up front so decode
+        can never OOM mid-sequence). FIFO: a blocked head blocks the queue
+        (no starvation of long prompts by short ones)."""
+        for slot in range(self.batch_slots):
+            if not self.queue:
+                return
+            if self.slot_req[slot] is not None:
+                continue
+            req = self.queue[0]
+            if self.pool.allocate(req.rid,
+                                  self._worst_case_tokens(req)) is None:
+                return                      # wait for a release
+            self.queue.pop(0)
+            self.slot_req[slot] = req
+            self.slot_pos[slot] = 0
+            self._fed[slot] = 0
+            self.block_tables[slot] = self.pool.block_table_row(
+                req.rid, self.pages_per_seq)
+
+    def _prefill_tick(self):
+        """Advance every prefilling slot by one prompt chunk in a single
+        batched call (per-row ctx_len/n_valid make ragged rows legal —
+        same mechanism the decode step uses; non-prefilling rows ride
+        along masked with n_valid=0). Interleaved with the batch decode
+        step so running sequences keep producing tokens."""
+        rows = [i for i in range(self.batch_slots)
+                if self.slot_req[i] is not None and self._fed[i] >= 0]
+        if not rows:
+            return
+        chunk = {i: min(self.prefill_chunk,
+                        len(self.slot_req[i].prompt) - int(self._fed[i]))
+                 for i in rows}
+        c_pad = _pad_pow2(max(chunk.values()), self.prefill_chunk)
+        tokens = np.zeros((self.batch_slots, c_pad), np.int32)
+        ctx = np.zeros(self.batch_slots, np.int32)
+        n_valid = np.zeros(self.batch_slots, np.int32)
+        for i in rows:
+            fed, c = int(self._fed[i]), chunk[i]
+            tokens[i, :c] = self.slot_req[i].prompt[fed:fed + c]
+            ctx[i] = fed
+            n_valid[i] = c
+        logits, self.caches = self._paged_step(
+            self.params, jnp.asarray(tokens), jnp.asarray(ctx),
+            jnp.asarray(self.block_tables), jnp.asarray(n_valid),
+            self.caches, self.cfg, self.rt)
+        logits = np.asarray(logits)
+        for i in rows:
+            req = self.slot_req[i]
+            self._fed[i] += chunk[i]
+            self.slot_pos[i] = self._fed[i]
+            if self._fed[i] == len(req.prompt):
+                self._fed[i] = -1           # -> decoding
+                first = self._pick_token(logits[i], req)
+                req.output.append(int(first))
+                self._tokens_out += 1
+                req.t_first_token = time.time()
+                self._maybe_finish(i)       # max_new_tokens == 1
+
+    def _decode_step_paged(self):
+        active = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and self._fed[i] < 0]
+        if not active:
+            return
+        tokens = np.zeros((self.batch_slots, 1), np.int32)
+        n_valid = np.zeros(self.batch_slots, np.int32)
+        ctx = np.zeros(self.batch_slots, np.int32)
+        for i in active:
+            tokens[i, 0] = self.slot_req[i].output[-1]
+            n_valid[i] = 1
+            ctx[i] = self.slot_pos[i]
+        logits, self.caches = self._paged_step(
+            self.params, jnp.asarray(tokens), jnp.asarray(ctx),
+            jnp.asarray(self.block_tables), jnp.asarray(n_valid),
+            self.caches, self.cfg, self.rt)
+        logits = np.asarray(logits)
+        for i in active:
+            req = self.slot_req[i]
+            tok = self._pick_token(logits[i], req)
+            req.output.append(int(tok))
+            self._tokens_out += 1
+            self.slot_pos[i] += 1
+            self._maybe_finish(i)
+
+    def _maybe_finish(self, slot: int):
+        req = self.slot_req[slot]
+        if (len(req.output) >= req.max_new_tokens
+                or self.slot_pos[slot] >= self.max_seq - 1):
+            self._finish(slot)
+
+    def _finish(self, slot: int):
+        req = self.slot_req[slot]
+        req.done = True
+        req.t_done = time.time()
+        self.finished.append(req)
+        self.slot_req[slot] = None
+        if self.kv_layout == "paged":
+            self.pool.release(req.rid)      # pages recycle immediately
+            self.block_tables[slot] = 0
+            self._fed[slot] = -1
+
+    # -- dense internals -----------------------------------------------------
+
+    def _admit_dense(self):
         for slot in range(self.batch_slots):
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.pop(0)
@@ -103,9 +391,11 @@ class ServeEngine:
                 self.slot_pos[slot] = len(req.prompt)
                 first = self._pick_token(logits[0], req)
                 req.output.append(int(first))
+                self._tokens_out += 1
                 req.t_first_token = time.time()
+                self._maybe_finish(slot)    # max_new_tokens == 1
 
-    def _decode_step(self):
+    def _decode_step_dense(self):
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
@@ -123,13 +413,11 @@ class ServeEngine:
             req = self.slot_req[i]
             tok = self._pick_token(logits[i], req)
             req.output.append(int(tok))
+            self._tokens_out += 1
             self.slot_pos[i] += 1
-            if (len(req.output) >= req.max_new_tokens
-                    or self.slot_pos[i] >= self.max_seq - 1):
-                req.done = True
-                req.t_done = time.time()
-                self.finished.append(req)
-                self.slot_req[i] = None
+            self._maybe_finish(i)
+
+    # -- shared --------------------------------------------------------------
 
     def _pick_token(self, row: np.ndarray, req: Request) -> int:
         if req.temperature <= 0:

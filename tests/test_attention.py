@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref as kref
 from repro.nn import attention as attn
-from repro.nn.layers import Runtime
+from repro.runtime import Runtime
 from repro.nn.rotary import apply_mrope, apply_rope
 
 jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,29 @@
+"""Docs stay executable: every fenced python snippet in README.md and
+docs/*.md compiles, and `# exec-check` blocks run (same checker CI uses —
+tools/check_doc_snippets.py)."""
+import os
+import sys
+
+_TOOLS = os.path.normpath(os.path.join(os.path.dirname(__file__), "..",
+                                       "tools"))
+sys.path.insert(0, _TOOLS)
+
+import check_doc_snippets  # noqa: E402
+
+
+def test_doc_snippets_compile_and_exec():
+    failures = []
+    for f in check_doc_snippets.default_files():
+        failures.extend(check_doc_snippets.check_file(f))
+    assert not failures, "\n".join(failures)
+
+
+def test_docs_exist_and_crosslinked():
+    readme = open(os.path.join(check_doc_snippets.REPO, "README.md")).read()
+    serving = open(os.path.join(check_doc_snippets.REPO, "docs",
+                                "SERVING.md")).read()
+    design = open(os.path.join(check_doc_snippets.REPO, "DESIGN.md")).read()
+    assert "docs/SERVING.md" in readme
+    assert "docs/SERVING.md" in design          # cross-link from DESIGN
+    assert "DESIGN.md" in serving
+    assert "pytest" in readme                   # tier-1 verify command

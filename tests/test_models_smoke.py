@@ -11,7 +11,8 @@ import pytest
 from repro.configs import assigned_archs, get_config, reduced
 from repro.models import lm as lm_mod
 from repro.models import encdec as ed_mod
-from repro.nn.layers import Runtime, param_count
+from repro.nn.layers import param_count
+from repro.runtime import Runtime
 
 jax.config.update("jax_platform_name", "cpu")
 

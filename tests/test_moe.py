@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.nn import moe
-from repro.nn.layers import Runtime
+from repro.runtime import Runtime
 
 jax.config.update("jax_platform_name", "cpu")
 

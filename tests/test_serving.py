@@ -1,5 +1,8 @@
 """Serving engine: continuous batching, per-slot positions, quantized
-weights; decode agrees with the model's full forward."""
+weights; decode agrees with the model's full forward. Paged KV layout:
+identical greedy outputs vs the dense layout, page-budget admission
+(queued, not crashed), reclaim-unblocks-admission, and paged-vs-dense
+logits agreement at the model level."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +10,7 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.models import lm as lm_mod
-from repro.nn.layers import Runtime
+from repro.runtime import Runtime
 from repro.serving.engine import Request, ServeEngine
 
 jax.config.update("jax_platform_name", "cpu")
@@ -87,6 +90,170 @@ def test_per_slot_positions_independent():
     both = {r.rid: r.output for r in eng.run()}
     assert both[0] == solo(p1)
     assert both[1] == solo(p2)
+
+
+def test_paged_matches_dense_engine_mixed_lengths():
+    """Acceptance: the paged engine (chunked prefill + block-table decode)
+    produces identical greedy outputs to the dense engine on a mixed-length
+    request batch (ref backend)."""
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(4), cfg)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (3, 9, 17, 6, 12)]
+
+    def drive(layout, **kw):
+        eng = ServeEngine(params, cfg, batch_slots=2, max_seq=32,
+                          quantize=None, rt=RT, kv_layout=layout, **kw)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+        return {r.rid: r.output for r in eng.run()}, eng
+
+    dense, _ = drive("dense")
+    paged, eng = drive("paged", prefill_chunk=8)
+    assert eng.kv_layout == "paged"
+    assert dense == paged
+    m = eng.metrics()
+    assert m["requests_finished"] == 5
+    assert 0.0 < m["occupancy_peak"] <= 1.0
+    assert m["peak_kv_bytes"] > 0
+
+
+def test_paged_chunk_size_invariance():
+    """Chunked prefill is a scheduling choice, not a model change: outputs
+    are identical whether the prompt streams in 4-token chunks or lands in
+    one chunk."""
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(5), cfg)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 13).astype(np.int32)
+
+    def drive(chunk):
+        eng = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                          quantize=None, rt=RT, kv_layout="paged",
+                          prefill_chunk=chunk)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+        return eng.run()[0].output
+
+    assert drive(4) == drive(32)
+
+
+def test_page_budget_admission_queues_then_reclaims():
+    """A request whose worst-case footprint exceeds the free pages stays
+    queued (not crashed, not evicting); the page reclaim when the running
+    request finishes makes it admissible."""
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(6), cfg)
+    rng = np.random.default_rng(6)
+    p1 = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+
+    def solo(prompt):
+        eng = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                          quantize=None, rt=RT, kv_layout="paged",
+                          page_size=8, pool_pages=2)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+        return eng.run()[0].output
+
+    # pool of 2 pages x 8 tokens: each request needs 2 pages (10 + 5
+    # tokens) -> only one sequence fits at a time despite 2 slots
+    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=32,
+                      quantize=None, rt=RT, kv_layout="paged",
+                      page_size=8, pool_pages=2)
+    r1 = Request(rid=0, prompt=p1, max_new_tokens=5)
+    r2 = Request(rid=1, prompt=p2, max_new_tokens=5)
+    eng.submit(r1)
+    eng.submit(r2)
+    done = {r.rid: r for r in eng.run()}
+    assert set(done) == {0, 1}
+    # one denied *sequence*, however many ticks it waited
+    assert eng.pool.stats.admission_denials == 1
+    assert done[0].t_done <= done[1].t_first_token       # admitted after
+    assert eng.pool.free_pages() == 2                    # all reclaimed
+    # backpressure must not change the outputs
+    assert done[0].output == solo(p1)
+    assert done[1].output == solo(p2)
+
+
+def test_paged_vs_dense_decode_logits_agree():
+    """Model-level: lm_paged_step (prefill chunk + decode steps) matches
+    the dense lm_prefill/lm_decode_step logits on the ref backend."""
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(7), cfg)
+    rng = np.random.default_rng(7)
+    plen, n_dec, max_seq, ps = 9, 4, 32, 8
+    prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+    toks = jnp.asarray(prompt)[None, :]
+
+    # dense reference
+    caches = lm_mod.init_caches(cfg, 1, max_seq, dtype=jnp.float32)
+    d_logits, caches = lm_mod.lm_prefill(params, toks, caches, cfg, RT)
+
+    # paged: whole prompt as one chunk, identity block table
+    n_pages = max_seq // ps
+    pcaches = lm_mod.paged_init_caches(cfg, n_pages, ps, dtype=jnp.float32)
+    bt = jnp.arange(n_pages, dtype=jnp.int32)[None, :]
+    p_logits, pcaches = lm_mod.lm_paged_step(
+        params, toks, jnp.zeros(1, jnp.int32), bt,
+        jnp.asarray([plen], jnp.int32), pcaches, cfg, RT)
+    np.testing.assert_allclose(np.asarray(d_logits), np.asarray(p_logits),
+                               atol=1e-4)
+
+    pos = plen
+    tok = int(jnp.argmax(d_logits[0]))
+    for _ in range(n_dec):
+        d_logits, caches = lm_mod.lm_decode_step(
+            params, jnp.asarray([tok], jnp.int32), jnp.int32(pos),
+            caches, cfg, RT)
+        p_logits, pcaches = lm_mod.lm_paged_step(
+            params, jnp.asarray([[tok]], jnp.int32),
+            jnp.asarray([pos], jnp.int32), bt,
+            jnp.ones(1, jnp.int32), pcaches, cfg, RT)
+        np.testing.assert_allclose(np.asarray(d_logits),
+                                   np.asarray(p_logits), atol=1e-4)
+        tok = int(jnp.argmax(d_logits[0]))
+        pos += 1
+
+
+def test_submit_rejects_oversized_request():
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(8), cfg)
+    eng = ServeEngine(params, cfg, batch_slots=1, max_seq=16,
+                      quantize=None, rt=RT)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0,
+                           prompt=np.zeros(14, np.int32),
+                           max_new_tokens=8))
+    # a request that fits max_seq but could NEVER fit the page pool must
+    # be rejected at submit, not spin in the queue forever
+    tiny = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                       quantize=None, rt=RT, kv_layout="paged",
+                       page_size=8, pool_pages=1)
+    with pytest.raises(ValueError):
+        tiny.submit(Request(rid=1, prompt=np.zeros(10, np.int32),
+                            max_new_tokens=5))
+    # duplicate rids key the page allocator — rejected while in flight
+    paged = ServeEngine(params, cfg, batch_slots=2, max_seq=32,
+                        quantize=None, rt=RT, kv_layout="paged")
+    paged.submit(Request(rid=2, prompt=np.zeros(4, np.int32),
+                         max_new_tokens=2))
+    with pytest.raises(ValueError):
+        paged.submit(Request(rid=2, prompt=np.zeros(4, np.int32),
+                             max_new_tokens=2))
+
+
+def test_max_new_tokens_one_respected():
+    """The first token (emitted at prefill completion) counts toward
+    max_new_tokens — a request for 1 token gets exactly 1, both layouts."""
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(9), cfg)
+    prompt = np.arange(5, dtype=np.int32) % cfg.vocab_size
+    for layout in ("dense", "paged"):
+        eng = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                          quantize=None, rt=RT, kv_layout=layout)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
+        out = eng.run()[0].output
+        assert len(out) == 1, (layout, out)
 
 
 def test_quantized_serving_close_to_dense():

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.nn import ssm
-from repro.nn.layers import Runtime
+from repro.runtime import Runtime
 
 jax.config.update("jax_platform_name", "cpu")
 RT = Runtime(impl="ref", q_chunk=16)

@@ -9,7 +9,8 @@ from repro.data.mnist import SynthDigits
 from repro.data.tokens import TokenStream, markov_batch
 from repro.models.mlp_mnist import (paper_mlp_init, paper_mlp_loss,
                                     paper_mlp_predict)
-from repro.nn.layers import Runtime, quantize_params
+from repro.nn.layers import quantize_params
+from repro.runtime import Runtime
 from repro.training import make_optimizer
 
 jax.config.update("jax_platform_name", "cpu")

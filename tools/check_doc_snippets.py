@@ -1,0 +1,69 @@
+"""Compile (and selectively execute) the fenced python snippets in the
+docs, so documentation code can't rot silently.
+
+  PYTHONPATH=src python tools/check_doc_snippets.py [files...]
+
+Default file set: README.md and docs/*.md. Every ` ```python ` block must
+``compile()``; blocks whose first line is ``# exec-check`` are executed
+too (keep those dependency-light and fast — they run in CI and in
+tests/test_docs.py). Exits nonzero listing every failing block.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+_FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def default_files() -> list[str]:
+    return ([os.path.join(REPO, "README.md")]
+            + sorted(glob.glob(os.path.join(REPO, "docs", "*.md"))))
+
+
+def check_file(path: str) -> list[str]:
+    """Returns a list of failure descriptions (empty = all snippets OK)."""
+    failures = []
+    text = open(path).read()
+    rel = os.path.relpath(path, REPO)
+    for i, m in enumerate(_FENCE.finditer(text)):
+        src = m.group(1)
+        line = text[:m.start()].count("\n") + 2       # first snippet line
+        tag = f"{rel}:{line} (snippet {i})"
+        try:
+            code = compile(src, tag, "exec")
+        except SyntaxError as e:
+            failures.append(f"{tag}: does not compile: {e}")
+            continue
+        if src.lstrip().startswith("# exec-check"):
+            try:
+                exec(code, {"__name__": f"doc_snippet_{i}"})
+            except Exception as e:
+                failures.append(f"{tag}: exec-check failed: {e!r}")
+    return failures
+
+
+def main(argv=None) -> int:
+    files = (argv or sys.argv[1:]) or default_files()
+    failures, n_files = [], 0
+    for f in files:
+        if not os.path.exists(f):
+            # a typo'd or deleted path must fail loudly, not let the
+            # checker report success while checking nothing
+            failures.append(f"{f}: file not found")
+            continue
+        n_files += 1
+        failures.extend(check_file(f))
+    for msg in failures:
+        print(f"[doc-snippets] FAIL {msg}")
+    if not failures:
+        print(f"[doc-snippets] OK ({n_files} files)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
