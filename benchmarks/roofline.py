@@ -117,7 +117,11 @@ def analytic_hbm_bytes(cfg, shape, parallelism: str, quantized: bool,
     n_attn_layers = sum(1 for p in cfg.pattern
                         if p.split("+")[0] in ("attn", "xdec")) \
         * cfg.n_periods
-    kv_elem_bytes = 1.0 if kv_quant else 2.0   # SPx-int8 KV vs bf16
+    # quantized KV: uint8 codes + one f32 scale per (token, head) side
+    # (scheme-independent layout — docs/QUANTIZATION.md); else bf16
+    from repro.core.spx import kv_token_side_bytes
+    kv_elem_bytes = (kv_token_side_bytes(cfg.dh) / cfg.dh if kv_quant
+                     else 2.0)
     kv_total = (b * n_attn_layers * cfg.n_kv_heads * s * cfg.dh * 2
                 * kv_elem_bytes / n_chips)
     if shape.kind == "decode":

@@ -44,12 +44,16 @@ def main(argv=None):
                .astype(np.int32) for _ in range(args.requests)]
 
     results = {}
-    # axes: weights (dense vs sp2_4) x KV layout (dense slots vs paged)
-    for scheme, layout in ((None, "dense"), ("sp2_4", "dense"),
-                           ("sp2_4", "paged")):
-        tag = f"{scheme or 'dense'}/{layout}"
+    # axes: weights (dense vs sp2_4) x KV (dense slots, paged, paged +
+    # SPx-quantized codes+scale pages — docs/QUANTIZATION.md)
+    for scheme, layout, kvq in ((None, "dense", False),
+                                ("sp2_4", "dense", False),
+                                ("sp2_4", "paged", False),
+                                ("sp2_4", "paged", True)):
+        tag = f"{scheme or 'dense'}/{layout}{'+kvq' if kvq else ''}"
+        ert = rt.replace(kv_quant=True, kv_scheme="spx_8_x3") if kvq else rt
         eng = ServeEngine(params, cfg, batch_slots=4, max_seq=64,
-                          quantize=scheme, rt=rt, kv_layout=layout)
+                          quantize=scheme, rt=ert, kv_layout=layout)
         t0 = time.time()
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p,
@@ -75,9 +79,16 @@ def main(argv=None):
     agree_p = np.mean([
         results["sp2_4/dense"][i] == results["sp2_4/paged"][i]
         for i in range(args.requests)])
+    # agreement of SPx-quantized KV pages vs the f32 pages (token-level)
+    agree_kvq = np.mean([
+        np.mean(np.array(results["sp2_4/paged"][i])
+                == np.array(results["sp2_4/paged+kvq"][i]))
+        for i in range(args.requests)])
     print(f"[serve_llm] dense vs sp2_4 greedy-token agreement: {agree_q:.2f}")
     print(f"[serve_llm] dense vs paged KV exact-output agreement: "
           f"{agree_p:.2f}")
+    print(f"[serve_llm] f32 vs SPx-quantized KV pages token agreement: "
+          f"{agree_kvq:.2f}")
     return results
 
 

@@ -41,7 +41,23 @@ __all__ = [
     "unpack_int4",
     "SCHEMES",
     "scheme_levels",
+    "KV_CODE_BYTES",
+    "KV_SCALE_BYTES",
+    "kv_token_side_bytes",
 ]
+
+#: Quantized KV-cache storage layout (scheme-independent; the single owner
+#: of these constants — serving/kv_cache.py, runtime/planner.py and
+#: benchmarks/roofline.py all derive their byte math from here): one uint8
+#: code per element plus one f32 scale per (token, head) side.
+KV_CODE_BYTES = 1
+KV_SCALE_BYTES = 4
+
+
+def kv_token_side_bytes(dh: int) -> int:
+    """Bytes one token's K *or* V occupies for one KV head in the
+    quantized codes+scale cache layout."""
+    return dh * KV_CODE_BYTES + KV_SCALE_BYTES
 
 
 # ---------------------------------------------------------------------------
@@ -245,6 +261,11 @@ def calibrate_mse(x: jax.Array, scheme: str, channel_axis: int | None = -1,
 def pack_int4(codes: jax.Array) -> jax.Array:
     """Pack uint8 codes (<16) pairwise along the LAST axis: even idx -> low
     nibble. Last dim must be even."""
+    if codes.shape[-1] % 2:
+        raise ValueError(
+            f"pack_int4 needs an even last dim (two 4-bit codes per byte); "
+            f"got shape {tuple(codes.shape)} with last dim "
+            f"{codes.shape[-1]}. Pad the weight or pass pack=False.")
     lo = codes[..., 0::2]
     hi = codes[..., 1::2]
     return (lo | (hi << 4)).astype(jnp.uint8)

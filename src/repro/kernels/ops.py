@@ -18,16 +18,18 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import spx
 from repro.core.quantized import QuantizedTensor
 from repro.runtime import planner, registry
 
 from . import ref as ref_impl
 from .flash_attention import flash_attention_pallas
-from .paged_attention import paged_attention_pallas
+from .paged_attention import (paged_attention_pallas,
+                              paged_attention_quant_pallas)
 from .spx_matmul import spx_matmul_pallas
 
 __all__ = ["spx_matmul", "flash_attention", "paged_attention",
-           "resolve_impl"]
+           "paged_attention_quant", "resolve_impl"]
 
 
 def _on_tpu() -> bool:
@@ -239,4 +241,57 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     out = entry.fn(q4, k_pages, v_pages,
                    jnp.asarray(block_table, jnp.int32),
                    jnp.asarray(ctx_len, jnp.int32))
+    return out.reshape(b, hq, dh)
+
+
+# ---------------------------------------------------------------------------
+# paged_attention_quant: decode over quantized (codes + scale) KV pools with
+# the codebook dequant fused into the page loop — registered impls share the
+# signature fn(q4, k_codes, k_scale, v_codes, v_scale, block_table, ctx_len,
+# lut)
+# ---------------------------------------------------------------------------
+
+@registry.register("paged_attention_quant", "ref",
+                   priority=registry.PRIORITY_REFERENCE)
+def _paged_attention_quant_ref(q4, k_codes, k_scale, v_codes, v_scale,
+                               block_table, ctx_len, lut):
+    return ref_impl.paged_attention_quant_ref(q4, k_codes, k_scale,
+                                              v_codes, v_scale,
+                                              block_table, ctx_len, lut)
+
+
+registry.register("paged_attention_quant", "pallas",
+                  priority=registry.PRIORITY_ACCELERATOR,
+                  available=_on_tpu)(
+    functools.partial(paged_attention_quant_pallas, interpret=False))
+registry.register("paged_attention_quant", "interpret",
+                  priority=registry.PRIORITY_DEBUG)(
+    functools.partial(paged_attention_quant_pallas, interpret=True))
+
+
+def paged_attention_quant(q: jax.Array, k_pages: dict, v_pages: dict,
+                          block_table: jax.Array, ctx_len: jax.Array, *,
+                          kv_scheme: str = "uniform8",
+                          impl: str = "auto") -> jax.Array:
+    """Decode attention of one query token per sequence against its
+    quantized paged KV context, with LUT dequantization fused into the
+    page-streaming loop (no full-pool dequant pass — the paper's §3.2
+    codes stay 1 byte/element all the way to VMEM).
+
+    q: (B, Hq, dh); k_pages/v_pages: {"codes": (n_pages, Hkv, page_size,
+    dh) uint8, "scale": (n_pages, Hkv, page_size, 1) f32} — the pools
+    ``nn.attention.paged_kv_write`` maintains; ``kv_scheme`` names the
+    core/spx level set the codes were quantized under (static — resolves
+    to a <=256-entry f32 codebook). Returns (B, Hq, dh).
+    """
+    b, hq, dh = q.shape
+    hkv = k_pages["codes"].shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    q4 = q.reshape(b, hkv, hq // hkv, dh)
+    lut = spx.codebook(spx.scheme_levels(kv_scheme), dtype=jnp.float32)
+    entry = registry.resolve("paged_attention_quant", impl)
+    out = entry.fn(q4, k_pages["codes"], k_pages["scale"],
+                   v_pages["codes"], v_pages["scale"],
+                   jnp.asarray(block_table, jnp.int32),
+                   jnp.asarray(ctx_len, jnp.int32), lut)
     return out.reshape(b, hq, dh)

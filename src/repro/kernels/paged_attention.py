@@ -32,9 +32,53 @@ import jax.experimental.pallas.tpu as pltpu
 
 from repro.compat import pallas_compiler_params
 
-__all__ = ["paged_attention_pallas"]
+__all__ = ["paged_attention_pallas", "paged_attention_quant_pallas"]
 
 _NEG_INF = -1e30
+
+
+def _init_stats(m_ref, l_ref, acc_ref):
+    m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _page_update(q, k, v, ctx, j, *, scale, page_size, m_ref, l_ref,
+                 acc_ref, k_scale=None, v_scale=None):
+    """One page's contribution to the running online softmax: QK^T on the
+    current (rep, dh) query block, causal/context masking inside the page,
+    and the (m, l, acc) rescale-and-accumulate.
+
+    ``k_scale``/``v_scale`` ((1, page_size), quantized pools only) are the
+    per-token dequant scales, folded OUT of the dh contraction — k/v then
+    carry bare codebook levels and the fold costs page_size multiplies on
+    the score/prob rows instead of page_size x dh on the values (same
+    algebra as nn/attention.py::_local_flash_decode)."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if k_scale is not None:
+        s = s * k_scale
+    rep = q.shape[0]
+    pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (rep, page_size), 1)
+    s = jnp.where(pos < ctx, s, _NEG_INF)
+
+    m_prev = m_ref[...]                # (rep, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)             # (rep, page_size)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = p if v_scale is None else p * v_scale
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        pv.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _finalize_out(o_ref, m_ref, l_ref, acc_ref, out_dtype):
+    # ctx == 0 rows (inactive slots) never ran a page: l == 0, out == 0
+    denom = jnp.maximum(l_ref[...], 1e-30)
+    o_ref[0, 0] = (acc_ref[...] / denom).astype(out_dtype)
 
 
 def _kernel(bt_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
@@ -46,39 +90,53 @@ def _kernel(bt_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        _init_stats(m_ref, l_ref, acc_ref)
 
     ctx = ctx_ref[b]
 
     @pl.when(j * page_size < ctx)
     def _page():
-        q = q_ref[0, 0]                    # (rep, dh)
-        k = k_ref[0, 0]                    # (page_size, dh)
-        v = v_ref[0, 0]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        rep = q.shape[0]
-        pos = j * page_size + jax.lax.broadcasted_iota(
-            jnp.int32, (rep, page_size), 1)
-        s = jnp.where(pos < ctx, s, _NEG_INF)
-
-        m_prev = m_ref[...]                # (rep, 1)
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new)             # (rep, page_size)
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        _page_update(q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], ctx, j,
+                     scale=scale, page_size=page_size, m_ref=m_ref,
+                     l_ref=l_ref, acc_ref=acc_ref)
 
     @pl.when(j == n_logical - 1)
     def _finalize():
-        # ctx == 0 rows (inactive slots) never ran _page: l == 0, out == 0
-        denom = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / denom).astype(out_dtype)
+        _finalize_out(o_ref, m_ref, l_ref, acc_ref, out_dtype)
+
+
+def _quant_kernel(bt_ref, ctx_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
+                  lut_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+                  page_size: int, n_logical: int, out_dtype):
+    """Fused-dequant variant: K/V pages arrive as uint8 codebook codes plus
+    a per-token f32 scale; the LUT gather (VPU) happens page-by-page in
+    VMEM, so HBM only ever moves 1-byte codes — the §3.2 memory win
+    applied to the decode hot path. The codebook (<=256 f32 entries) is
+    resident in VMEM for the whole grid."""
+    del bt_ref
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _init_stats(m_ref, l_ref, acc_ref)
+
+    ctx = ctx_ref[b]
+
+    @pl.when(j * page_size < ctx)
+    def _page():
+        lut = lut_ref[...]
+        k = jnp.take(lut, kc_ref[0, 0].astype(jnp.int32), axis=0)
+        v = jnp.take(lut, vc_ref[0, 0].astype(jnp.int32), axis=0)
+        _page_update(q_ref[0, 0], k, v, ctx, j, scale=scale,
+                     page_size=page_size, m_ref=m_ref, l_ref=l_ref,
+                     acc_ref=acc_ref,
+                     k_scale=ks_ref[0, 0][:, 0][None, :],
+                     v_scale=vs_ref[0, 0][:, 0][None, :])
+
+    @pl.when(j == n_logical - 1)
+    def _finalize():
+        _finalize_out(o_ref, m_ref, l_ref, acc_ref, out_dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
@@ -121,3 +179,62 @@ def paged_attention_pallas(q, k_pages, v_pages, block_table, ctx_len, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_table, ctx_len, q, k_pages, v_pages)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def paged_attention_quant_pallas(q, k_codes, k_scale, v_codes, v_scale,
+                                 block_table, ctx_len, lut, *,
+                                 out_dtype=None, interpret: bool = False):
+    """Fused-dequant paged decode attention (quantized KV pools).
+
+    q: (B, Hkv, rep, dh); k_codes/v_codes: (n_pages, Hkv, page_size, dh)
+    uint8 codebook codes; k_scale/v_scale: (n_pages, Hkv, page_size, 1)
+    f32 per-token scales; lut: (2^w,) f32 codebook (spx.codebook of the KV
+    scheme — a static per-scheme constant); block_table/ctx_len as in
+    ``paged_attention_pallas``. Returns (B, Hkv, rep, dh).
+
+    Same grid and online-softmax pipeline as the unquantized kernel; the
+    only difference is that each streamed page is 1-byte codes + scale
+    instead of act-dtype values, and ``lut[codes] * scale`` runs on the
+    VPU right before the MXU consumes the page.
+    """
+    b, hkv, rep, dh = q.shape
+    _, _, page_size, _ = k_codes.shape
+    max_pages = block_table.shape[1]
+    out_dtype = out_dtype or q.dtype
+    scale = 1.0 / (dh ** 0.5)
+
+    def page_spec(width):
+        return pl.BlockSpec((1, 1, page_size, width),
+                            lambda bb, h, j, bt, ctx: (bt[bb, j], h, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,             # block_table, ctx_len
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, dh),
+                         lambda bb, h, j, bt, ctx: (bb, h, 0, 0)),
+            page_spec(dh),                 # k codes
+            page_spec(1),                  # k scale
+            page_spec(dh),                 # v codes
+            page_spec(1),                  # v scale
+            pl.BlockSpec(lut.shape,        # whole LUT, VMEM-resident
+                         lambda bb, h, j, bt, ctx: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, dh),
+                               lambda bb, h, j, bt, ctx: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, 1), jnp.float32),      # running max m
+            pltpu.VMEM((rep, 1), jnp.float32),      # running denom l
+            pltpu.VMEM((rep, dh), jnp.float32),     # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, scale=scale, page_size=page_size,
+                          n_logical=max_pages, out_dtype=out_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, dh), out_dtype),
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, ctx_len, q, k_codes, k_scale, v_codes, v_scale, lut)

@@ -10,7 +10,8 @@ import jax.numpy as jnp
 
 from repro.core import spx
 
-__all__ = ["spx_matmul_ref", "attention_ref", "paged_attention_ref"]
+__all__ = ["spx_matmul_ref", "attention_ref", "paged_attention_ref",
+           "paged_attention_quant_ref"]
 
 
 def spx_matmul_ref(x, codes, scale, lut, *, packed: bool, out_dtype=None):
@@ -49,6 +50,14 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, ctx_len, *,
     # gather: (B, max_pages, Hkv, ps, dh) -> (B, Hkv, S, dh)
     k = jnp.moveaxis(k_pages[block_table], 2, 1).reshape(b, hkv, s_max, dh)
     v = jnp.moveaxis(v_pages[block_table], 2, 1).reshape(b, hkv, s_max, dh)
+    return _paged_softmax(q, k, v, ctx_len, out_dtype)
+
+
+def _paged_softmax(q, k, v, ctx_len, out_dtype):
+    """Shared masked-softmax core of the paged oracles. q: (B,Hkv,rep,dh);
+    k/v: (B,Hkv,S,dh) contiguous gathered views."""
+    dh = q.shape[-1]
+    s_max = k.shape[2]
     s = jnp.einsum("bhrd,bhkd->bhrk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * (dh ** -0.5)
     pos = jnp.arange(s_max)
@@ -63,6 +72,32 @@ def paged_attention_ref(q, k_pages, v_pages, block_table, ctx_len, *,
     # softmax degenerates to a mean — force the kernel's all-zero output
     o = jnp.where(ctx_len[:, None, None, None] > 0, o, 0.0)
     return o.astype(out_dtype)
+
+
+def paged_attention_quant_ref(q, k_codes, k_scale, v_codes, v_scale,
+                              block_table, ctx_len, lut, *, out_dtype=None):
+    """Quantized-pool variant of ``paged_attention_ref``: pools hold uint8
+    codebook codes plus a per-token f32 scale, and dequantization
+    (``lut[codes] * scale``) is fused after the page gather — the oracle
+    the fused-dequant Pallas kernel must match.
+
+    k_codes/v_codes: (n_pages, Hkv, page_size, dh) uint8; k_scale/v_scale:
+    (n_pages, Hkv, page_size, 1) f32; lut: (2^w,) f32 codebook
+    (spx.codebook of the KV scheme). Other args as paged_attention_ref.
+    """
+    out_dtype = out_dtype or q.dtype
+    b, hkv, rep, dh = q.shape
+    ps = k_codes.shape[2]
+    s_max = block_table.shape[1] * ps
+
+    def gather_dequant(codes, scale):
+        c = jnp.moveaxis(codes[block_table], 2, 1).reshape(b, hkv, s_max, dh)
+        a = jnp.moveaxis(scale[block_table], 2, 1).reshape(b, hkv, s_max, 1)
+        return jnp.take(lut, c.astype(jnp.int32), axis=0) * a
+
+    k = gather_dequant(k_codes, k_scale)
+    v = gather_dequant(v_codes, v_scale)
+    return _paged_softmax(q, k, v, ctx_len, out_dtype)
 
 
 def attention_ref(q, k, v, *, causal: bool = True, out_dtype=None):

@@ -2,7 +2,12 @@
 run a synthetic request workload, reporting latency/throughput/occupancy.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --requests 16 --scheme sp2_4 --kv-layout paged
+      --requests 16 --scheme sp2_4 --kv-layout paged \
+      --kv-quant --kv-scheme spx_8_x3
+
+Weight quantization (--scheme) and KV-cache quantization (--kv-quant +
+--kv-scheme, uniform8 baseline or non-uniform SPx) are independent axes;
+both compose with either KV layout — see docs/QUANTIZATION.md.
 
 Env knobs that reach serving: REPRO_PAGE_SIZE (tokens per KV page),
 REPRO_PREFILL_CHUNK (chunked-prefill length), REPRO_BLOCKS_* /
@@ -15,9 +20,11 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.core import spx
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime
 from repro.serving.engine import Request, ServeEngine
@@ -41,6 +48,15 @@ def main(argv=None):
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="KV pool size in pages (default: dense-equivalent)")
     ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="quantize the KV cache to codes+scale pages")
+    ap.add_argument("--kv-scheme", default="spx_8_x3",
+                    choices=sorted(s for s in spx.SCHEMES
+                                   if spx.code_width(
+                                       spx.scheme_levels(s)) == 8),
+                    help="level set for --kv-quant (8-bit-code schemes)")
+    ap.add_argument("--kv-dtype", default="f32", choices=("f32", "bf16"),
+                    help="unquantized KV cache element dtype")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -52,12 +68,16 @@ def main(argv=None):
 
     params = lm_mod.lm_init(jax.random.PRNGKey(args.seed), cfg)
     scheme = None if args.scheme == "none" else args.scheme
+    rt = Runtime(impl="auto", q_chunk=256, kv_quant=args.kv_quant,
+                 kv_scheme=args.kv_scheme)
     eng = ServeEngine(params, cfg, batch_slots=args.slots,
                       max_seq=args.max_seq, quantize=scheme,
-                      rt=Runtime(impl="auto", q_chunk=256),
+                      rt=rt,
                       kv_layout=args.kv_layout, page_size=args.page_size,
                       pool_pages=args.pool_pages,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk,
+                      kv_cache_dtype=(jnp.bfloat16 if args.kv_dtype == "bf16"
+                                      else jnp.float32))
 
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -73,7 +93,8 @@ def main(argv=None):
     m = eng.metrics()
     print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s), median TTFT {m['ttft_p50_ms']:.0f}ms "
-          f"scheme={scheme} layout={m['kv_layout']}")
+          f"scheme={scheme} layout={m['kv_layout']} "
+          f"kv={m['kv_scheme']}/{m['kv_cache_dtype']}")
     if m["kv_layout"] == "paged":
         print(f"[serve] pages: {m['n_pages']} x {m['page_size']} tok, "
               f"occupancy mean {m['occupancy_mean']:.2f} / "

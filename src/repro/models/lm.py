@@ -186,11 +186,14 @@ def lm_decode_step(params, token, pos, caches, cfg: ArchConfig, rt: Runtime):
 # -- paged serving (docs/SERVING.md) ----------------------------------------
 
 def paged_init_caches(cfg: ArchConfig, n_pages: int, page_size: int,
-                      dtype=jnp.bfloat16):
+                      dtype=jnp.bfloat16, kv_quant: bool = False):
     """Physical KV page pools for every slot in the pattern. Attention-only
     patterns (raises NotImplementedError otherwise — SSM state has nothing
-    to page; serve those with the dense layout)."""
-    return [slot_init_paged_cache(slot, cfg, n_pages, page_size, dtype)
+    to page; serve those with the dense layout). ``kv_quant`` switches the
+    pools to the codes+scale quantized layout (scheme from
+    ``Runtime.kv_scheme`` at step time)."""
+    return [slot_init_paged_cache(slot, cfg, n_pages, page_size, dtype,
+                                  kv_quant=kv_quant)
             for slot in cfg.pattern]
 
 

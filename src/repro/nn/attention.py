@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import spx
 from repro.kernels import ops
 from repro.kernels import ref as kref
 from repro.runtime import Runtime, registry
@@ -34,7 +35,7 @@ from .rotary import apply_mrope, apply_rope
 
 __all__ = ["attn_init", "attn_apply_dense", "attention_core",
            "decode_attention", "attn_decode_step", "paged_kv_write",
-           "attn_paged_step"]
+           "attn_paged_step", "quantize_kv", "dequantize_kv", "kv_lut"]
 
 _NEG = -1e30
 
@@ -240,24 +241,45 @@ def attn_apply_dense(p: dict, x: jax.Array, positions: jax.Array, *,
 # Decode: context-parallel flash-decode over a seq-sharded KV cache
 # ---------------------------------------------------------------------------
 
-def quantize_kv(x, axis=-1):
-    """Symmetric int8 (SPx uniform8) per-position quantization of K/V.
-    x: (..., dh) -> (codes int8, scale f32 (..., 1))."""
+def kv_lut(scheme: str) -> jnp.ndarray:
+    """f32 codebook LUT for a KV-cache scheme (pow2-padded; codes index it).
+    Only 8-bit-code schemes are legal for the KV cache — the cache stores
+    one uint8 code per element."""
+    levels = spx.scheme_levels(scheme)
+    if spx.code_width(levels) > 8:
+        raise ValueError(f"KV scheme {scheme!r} needs >8-bit codes")
+    return spx.codebook(levels, dtype=jnp.float32)
+
+
+def quantize_kv(x, scheme: str = "uniform8", axis=-1):
+    """Scheme-parameterized per-position quantization of K/V over a
+    ``core/spx`` codebook. ``uniform8`` is the plain symmetric-int8
+    baseline (255 uniform levels — NOT SPx); ``sp2_8`` / ``spx_8_x3`` are
+    the paper's non-uniform level sets at the same 1-byte code width.
+    x: (..., dh) -> (codes uint8, scale f32 (..., 1))."""
     scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
                     keepdims=True)
     scale = jnp.maximum(scale, 1e-8)
-    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale * 127.0),
-                     -127, 127).astype(jnp.int8)
+    codes = spx.quantize_to_codes(x, spx.scheme_levels(scheme), scale)
     return codes, scale
 
 
+def dequantize_kv(codes, scale, scheme: str = "uniform8",
+                  dtype=jnp.float32):
+    """codes (uint8) + per-position scale -> values: lut[codes] * scale."""
+    return spx.dequantize_codes(codes, kv_lut(scheme), scale, dtype=dtype)
+
+
 def _local_flash_decode(q, k_cache, v_cache, k_new, v_new, pos, *,
-                        shard_size: int, axis: str | None):
+                        shard_size: int, axis: str | None,
+                        kv_scheme: str = "uniform8"):
     """Per-shard decode body. Shapes (local view):
       q: (B, Hq, dh); caches: (B, Hkv, S_loc, dh) arrays, OR dicts
-      {"codes" int8 (B,Hkv,S_loc,dh), "scale" f32 (B,Hkv,S_loc,1)} for the
-      SPx-int8-quantized cache (halves the decode step's HBM-bound term —
-      EXPERIMENTS.md §Perf cell 1); k_new/v_new: (B, Hkv, dh);
+      {"codes" uint8 (B,Hkv,S_loc,dh), "scale" f32 (B,Hkv,S_loc,1)} for the
+      quantized cache — codebook codes under ``kv_scheme`` (uniform8 =
+      plain int8 baseline; sp2_8/spx_8_x3 = non-uniform SPx). Quantization
+      roughly halves the decode step's HBM-bound term vs bf16 —
+      EXPERIMENTS.md §Perf cell 1; k_new/v_new: (B, Hkv, dh);
       pos: (B,) int32 — per-sequence global write/attend position
       (continuous batching: slots decode at different depths).
     Returns (out (B, Hq, dh), k_cache, v_cache) updated.
@@ -283,18 +305,21 @@ def _local_flash_decode(q, k_cache, v_cache, k_new, v_new, pos, *,
         return jax.vmap(row)(cache, new, idx, in_range)
 
     if quantized:
-        kc_new, ks_new = quantize_kv(k_new)            # (B,Hkv,dh),(B,Hkv,1)
-        vc_new, vs_new = quantize_kv(v_new)
+        lut = kv_lut(kv_scheme)
+        kc_new, ks_new = quantize_kv(k_new, kv_scheme)  # (B,Hkv,dh),(B,Hkv,1)
+        vc_new, vs_new = quantize_kv(v_new, kv_scheme)
         k_cache = {"codes": upd(k_cache["codes"], kc_new),
                    "scale": upd(k_cache["scale"], ks_new)}
         v_cache = {"codes": upd(v_cache["codes"], vc_new),
                    "scale": upd(v_cache["scale"], vs_new)}
-        # scores: q . (codes * scale/127) == (q . codes) * scale/127
-        kr = jnp.repeat(k_cache["codes"], rep, axis=1)     # int8
+        # scores: q . (lut[codes] * scale) == (q . lut[codes]) * scale —
+        # the per-position scale folds out of the dh contraction, so the
+        # LUT gather is the only dequant work (scheme-independent)
+        kr = jnp.repeat(k_cache["codes"], rep, axis=1)     # uint8
         ksc = jnp.repeat(k_cache["scale"], rep, axis=1)    # (B,Hq,S,1)
-        s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
-                       kr.astype(jnp.float32))
-        s = s * (ksc[..., 0] / 127.0) * (dh ** -0.5)
+        kd = jnp.take(lut, kr.astype(jnp.int32), axis=0)   # f32 levels
+        s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), kd)
+        s = s * ksc[..., 0] * (dh ** -0.5)
     else:
         k_cache = upd(k_cache, k_new)
         v_cache = upd(v_cache, v_new)
@@ -310,9 +335,10 @@ def _local_flash_decode(q, k_cache, v_cache, k_new, v_new, pos, *,
     if quantized:
         vr = jnp.repeat(v_cache["codes"], rep, axis=1)
         vsc = jnp.repeat(v_cache["scale"], rep, axis=1)
-        # fold the per-position V scale into p before the int8 einsum
-        pv = p * (vsc[..., 0] / 127.0)
-        o = jnp.einsum("bhk,bhkd->bhd", pv, vr.astype(jnp.float32))
+        vd = jnp.take(lut, vr.astype(jnp.int32), axis=0)
+        # fold the per-position V scale into p before the level einsum
+        pv = p * vsc[..., 0]
+        o = jnp.einsum("bhk,bhkd->bhd", pv, vd)
     else:
         vr = jnp.repeat(v_cache, rep, axis=1)
         o = jnp.einsum("bhk,bhkd->bhd", p, vr.astype(jnp.float32))
@@ -338,11 +364,13 @@ def decode_attention(q, k_cache, v_cache, k_new, v_new, pos, *, rt: Runtime):
     Returns (out, k_cache, v_cache).
     """
     quantized = isinstance(k_cache, dict)
+    scheme = rt.kv_scheme
     s_total = (k_cache["codes"] if quantized else k_cache).shape[2]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (q.shape[0],))
     if rt.mesh is None or rt.decode_seq_axis is None:
         return _local_flash_decode(q, k_cache, v_cache, k_new, v_new, pos,
-                                   shard_size=s_total, axis=None)
+                                   shard_size=s_total, axis=None,
+                                   kv_scheme=scheme)
 
     axis = rt.decode_seq_axis
     n_shards = rt.mesh.shape[axis]
@@ -350,7 +378,8 @@ def decode_attention(q, k_cache, v_cache, k_new, v_new, pos, *, rt: Runtime):
                               q.shape[0] % _n_axes(rt.mesh, rt.data_axes)):
         # non-divisible (tiny test shapes): local path, replicated
         return _local_flash_decode(q, k_cache, v_cache, k_new, v_new, pos,
-                                   shard_size=s_total, axis=None)
+                                   shard_size=s_total, axis=None,
+                                   kv_scheme=scheme)
     shard_size = s_total // n_shards
     dp = rt.data_axes if rt.data_axes else None
     arr_spec = P(dp, None, axis, None)
@@ -360,7 +389,7 @@ def decode_attention(q, k_cache, v_cache, k_new, v_new, pos, *, rt: Runtime):
 
     fn = shard_map(
         functools.partial(_local_flash_decode, shard_size=shard_size,
-                          axis=axis),
+                          axis=axis, kv_scheme=scheme),
         mesh=rt.mesh,
         in_specs=(rep_spec, cache_spec, cache_spec, rep_spec, rep_spec,
                   P(dp)),
@@ -382,16 +411,21 @@ def _n_axes(mesh, axes) -> int:
 # ---------------------------------------------------------------------------
 
 def paged_kv_write(k_pages, v_pages, k_new, v_new, block_table, positions,
-                   valid):
+                   valid, kv_scheme: str = "uniform8"):
     """Scatter a chunk of new K/V rows into the physical page pools.
 
-    k_pages/v_pages: (n_pages, Hkv, page_size, dh); k_new/v_new:
-    (B, C, Hkv, dh); block_table: (B, max_pages) int32; positions: (B, C)
-    absolute token positions; valid: (B, C) bool — False rows (chunk
-    padding, inactive slots) are dropped via an out-of-range scatter index
-    instead of a masked read-modify-write.
+    k_pages/v_pages: (n_pages, Hkv, page_size, dh) arrays, OR dicts
+    {"codes" uint8 (n_pages, Hkv, page_size, dh), "scale" f32
+    (n_pages, Hkv, page_size, 1)} for the quantized pool (codes under
+    ``kv_scheme``); k_new/v_new: (B, C, Hkv, dh); block_table:
+    (B, max_pages) int32; positions: (B, C) absolute token positions;
+    valid: (B, C) bool — False rows (chunk padding, inactive slots) are
+    dropped via an out-of-range scatter index instead of a masked
+    read-modify-write.
     """
-    n_pages, hkv, ps, dh = k_pages.shape
+    quantized = isinstance(k_pages, dict)
+    n_pages, hkv, ps, dh = (k_pages["codes"] if quantized
+                            else k_pages).shape
     logical = positions // ps                            # (B, C)
     phys = jnp.take_along_axis(block_table,
                                jnp.clip(logical, 0,
@@ -400,15 +434,48 @@ def paged_kv_write(k_pages, v_pages, k_new, v_new, block_table, positions,
     off = positions % ps
     flat_p = phys.reshape(-1)
     flat_o = off.reshape(-1)
-    k_flat = k_new.reshape(-1, hkv, dh).astype(k_pages.dtype)
-    v_flat = v_new.reshape(-1, hkv, dh).astype(v_pages.dtype)
-    k_pages = k_pages.at[flat_p, :, flat_o, :].set(k_flat, mode="drop")
-    v_pages = v_pages.at[flat_p, :, flat_o, :].set(v_flat, mode="drop")
-    return k_pages, v_pages
+
+    def scatter(pages, new, width):
+        flat = new.reshape(-1, hkv, width).astype(pages.dtype)
+        return pages.at[flat_p, :, flat_o, :].set(flat, mode="drop")
+
+    if quantized:
+        kc, ks = quantize_kv(k_new, kv_scheme)    # (B,C,Hkv,dh), (B,C,Hkv,1)
+        vc, vs = quantize_kv(v_new, kv_scheme)
+        k_pages = {"codes": scatter(k_pages["codes"], kc, dh),
+                   "scale": scatter(k_pages["scale"], ks, 1)}
+        v_pages = {"codes": scatter(v_pages["codes"], vc, dh),
+                   "scale": scatter(v_pages["scale"], vs, 1)}
+        return k_pages, v_pages
+    return scatter(k_pages, k_new, dh), scatter(v_pages, v_new, dh)
+
+
+def _gather_pages(pages, block_table, kv_scheme: str):
+    """Gather one sequence's pages into a contiguous (B, Hkv, S, dh) view;
+    dict (quantized) pools are dequantized after the gather, so the f32
+    values are materialized *context-sized* (S = max_pages x page_size)
+    per chunk call — only the HBM-resident pool stays 1 byte/element.
+    That's the prefill path's trade (compute-bound, gather amortized);
+    the decode hot path never does this, it streams codes through the
+    fused-dequant kernel instead."""
+    bt = block_table
+    if isinstance(pages, dict):
+        b = bt.shape[0]
+        hkv, ps, dh = pages["codes"].shape[1:]
+        s_max = bt.shape[1] * ps
+        codes = jnp.moveaxis(pages["codes"][bt], 2, 1) \
+            .reshape(b, hkv, s_max, dh)
+        scale = jnp.moveaxis(pages["scale"][bt], 2, 1) \
+            .reshape(b, hkv, s_max, 1)
+        return dequantize_kv(codes, scale, kv_scheme, dtype=jnp.float32)
+    b = bt.shape[0]
+    hkv, ps, dh = pages.shape[1:]
+    return jnp.moveaxis(pages[bt], 2, 1).reshape(b, hkv, bt.shape[1] * ps,
+                                                 dh)
 
 
 def _paged_chunk_attention(q, k_pages, v_pages, block_table, positions,
-                           attend_len):
+                           attend_len, kv_scheme: str = "uniform8"):
     """Attention of a C-token chunk against the full paged context
     (including the chunk itself, already written to the pages).
 
@@ -419,12 +486,12 @@ def _paged_chunk_attention(q, k_pages, v_pages, block_table, positions,
     the paged-attention kernel instead. Returns (B, Hq, C, dh).
     """
     b, hq, c, dh = q.shape
-    hkv = k_pages.shape[1]
-    ps = k_pages.shape[2]
+    quantized = isinstance(k_pages, dict)
+    hkv, ps = (k_pages["codes"] if quantized else k_pages).shape[1:3]
     s_max = block_table.shape[1] * ps
     rep = hq // hkv
-    k = jnp.moveaxis(k_pages[block_table], 2, 1).reshape(b, hkv, s_max, dh)
-    v = jnp.moveaxis(v_pages[block_table], 2, 1).reshape(b, hkv, s_max, dh)
+    k = _gather_pages(k_pages, block_table, kv_scheme)
+    v = _gather_pages(v_pages, block_table, kv_scheme)
     if rep > 1:
         k = jnp.repeat(k, rep, axis=1)
         v = jnp.repeat(v, rep, axis=1)
@@ -452,27 +519,37 @@ def attn_paged_step(p: dict, x: jax.Array, ctx_len: jax.Array,
     x: (B, C, D) — the next C tokens of each sequence; ctx_len: (B,) int32
     tokens already in the pages; n_valid: (B,) int32 valid tokens in this
     chunk (< C for ragged tails / inactive rows — invalid tokens are
-    neither written nor trusted); cache: {"kp", "vp"} physical pools.
+    neither written nor trusted); cache: {"kp", "vp"} physical pools —
+    arrays, or {"codes", "scale"} dicts for the quantized pool
+    (``rt.kv_scheme`` picks the level set; decode then dispatches to the
+    fused-dequant paged-attention kernel).
     Returns (y (B, C, D), new_cache).
     """
     b, c, _ = x.shape
+    quantized = isinstance(cache["kp"], dict)
     q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, rt)
     positions = ctx_len[:, None] + jnp.arange(c, dtype=jnp.int32)   # (B, C)
     q, k = _apply_positional(q, k, positions, rope_theta, None)
     valid = jnp.arange(c)[None, :] < n_valid[:, None]               # (B, C)
     kp, vp = paged_kv_write(cache["kp"], cache["vp"], k, v, block_table,
-                            positions, valid)
+                            positions, valid, kv_scheme=rt.kv_scheme)
     attend_len = ctx_len + n_valid
     if c == 1:
-        out = ops.paged_attention(q[:, 0].reshape(b, n_heads, head_dim),
-                                  kp, vp, block_table, attend_len,
-                                  impl=rt.impl)
+        q1 = q[:, 0].reshape(b, n_heads, head_dim)
+        if quantized:
+            out = ops.paged_attention_quant(q1, kp, vp, block_table,
+                                            attend_len,
+                                            kv_scheme=rt.kv_scheme,
+                                            impl=rt.impl)
+        else:
+            out = ops.paged_attention(q1, kp, vp, block_table, attend_len,
+                                      impl=rt.impl)
         o = out[:, None]                                 # (B, 1, Hq*dh)->..
         o = o.reshape(b, 1, n_heads * head_dim)
     else:
         qh = jnp.swapaxes(q, 1, 2)                       # (B, Hq, C, dh)
         o = _paged_chunk_attention(qh, kp, vp, block_table, positions,
-                                   attend_len)
+                                   attend_len, kv_scheme=rt.kv_scheme)
         o = jnp.swapaxes(o, 1, 2).reshape(b, c, n_heads * head_dim)
     y = dense_apply(p["wo"], o, rt)
     return y, dict(cache, kp=kp, vp=vp)

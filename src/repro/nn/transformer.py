@@ -160,9 +160,9 @@ def _slot_apply(slot: str, p: dict, x, positions, cfg: ArchConfig,
             new_cache = dict(cache)
 
             def write(slot_cache, val):
-                if isinstance(slot_cache, dict):   # SPx-int8 KV
+                if isinstance(slot_cache, dict):   # quantized KV (rt.kv_scheme)
                     from .attention import quantize_kv
-                    codes, scale = quantize_kv(val)
+                    codes, scale = quantize_kv(val, rt.kv_scheme)
                     return {"codes": jax.lax.dynamic_update_slice_in_dim(
                                 slot_cache["codes"], codes, 0, axis=2),
                             "scale": jax.lax.dynamic_update_slice_in_dim(
@@ -386,7 +386,11 @@ def slot_init_cache(slot: str, cfg: ArchConfig, batch: int, max_seq: int,
                     dtype=jnp.bfloat16, n_periods: int | None = None,
                     kv_quant: bool = False):
     """Zero cache for one slot, stacked over periods (leading P dim).
-    kv_quant: store attention K/V as SPx-int8 codes + per-position scale."""
+    kv_quant: store attention K/V as codebook codes (uint8) + per-position
+    scale. The level set is NOT fixed here — codes are interpreted under
+    ``Runtime.kv_scheme`` at quantize/attend time (``uniform8`` = the plain
+    int8 baseline, ``sp2_8``/``spx_8_x3`` = non-uniform SPx), so the cache
+    layout is scheme-independent: 1 byte/element + 4 bytes/position."""
     mixer, _ = _parse_slot(slot)
     P = n_periods if n_periods is not None else cfg.n_periods
 
@@ -398,7 +402,7 @@ def slot_init_cache(slot: str, cfg: ArchConfig, batch: int, max_seq: int,
         if kv_quant:
             def qkv():
                 return {"codes": jnp.zeros((P, batch, cfg.n_kv_heads,
-                                            max_seq, cfg.dh), jnp.int8),
+                                            max_seq, cfg.dh), jnp.uint8),
                         "scale": jnp.ones((P, batch, cfg.n_kv_heads,
                                            max_seq, 1), jnp.float32)}
             cache = {"k": qkv(), "v": qkv()}
@@ -437,15 +441,28 @@ def slot_init_cache(slot: str, cfg: ArchConfig, batch: int, max_seq: int,
 
 def slot_init_paged_cache(slot: str, cfg: ArchConfig, n_pages: int,
                           page_size: int, dtype=jnp.bfloat16,
-                          n_periods: int | None = None):
+                          n_periods: int | None = None,
+                          kv_quant: bool = False):
     """Physical K/V page pools for one attention slot, stacked over periods:
-    {"kp", "vp"} each (P, n_pages, Hkv, page_size, dh). The pool is shared
-    by every sequence — ownership lives in the host-side PagePool
-    (serving/kv_cache.py), the device only ever sees block tables."""
+    {"kp", "vp"} each (P, n_pages, Hkv, page_size, dh) — or, when
+    ``kv_quant``, each a {"codes" uint8 (P, n_pages, Hkv, page_size, dh),
+    "scale" f32 (P, n_pages, Hkv, page_size, 1)} dict (codes interpreted
+    under ``Runtime.kv_scheme``; ``dtype`` is ignored — the quantized
+    layout is 1 byte/element + 4 bytes/position regardless of scheme).
+    The pool is shared by every sequence — ownership lives in the
+    host-side PagePool (serving/kv_cache.py), the device only ever sees
+    block tables."""
     mixer, _ = _parse_slot(slot)
     if mixer != "attn":
         raise NotImplementedError(
             f"paged KV cache supports 'attn' slots only, got {slot!r}")
     P = n_periods if n_periods is not None else cfg.n_periods
+    if kv_quant:
+        def pool():
+            return {"codes": jnp.zeros((P, n_pages, cfg.n_kv_heads,
+                                        page_size, cfg.dh), jnp.uint8),
+                    "scale": jnp.ones((P, n_pages, cfg.n_kv_heads,
+                                       page_size, 1), jnp.float32)}
+        return {"kp": pool(), "vp": pool()}
     kp = jnp.zeros((P, n_pages, cfg.n_kv_heads, page_size, cfg.dh), dtype)
     return {"kp": kp, "vp": kp + 0}

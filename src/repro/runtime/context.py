@@ -19,7 +19,13 @@ Field semantics are unchanged from the original object:
   model_axis       tensor/expert-parallel axis
   unroll           True removes every While loop (roofline cost variants
                    only — DESIGN.md §6)
-  kv_quant         SPx-int8 KV cache (EXPERIMENTS.md §Perf cell 1)
+  kv_quant         quantized KV cache: codebook codes + per-position scale
+                   (EXPERIMENTS.md §Perf cell 1). The *level set* is chosen
+                   by ``kv_scheme`` — plain int8 is the ``uniform8`` scheme,
+                   not SPx; the non-uniform SPx options are ``sp2_8`` /
+                   ``spx_8_x3`` (see core/spx.SCHEMES, docs/QUANTIZATION.md)
+  kv_scheme        core/spx scheme name for the quantized KV cache (only
+                   read when kv_quant is set; 8-bit code widths only)
   attn_cp          context-parallel prefill attention (§Perf cell 2)
 """
 from __future__ import annotations
@@ -41,6 +47,7 @@ class Runtime:
     model_axis: Optional[str] = "model"
     unroll: bool = False
     kv_quant: bool = False
+    kv_scheme: str = "uniform8"
     attn_cp: bool = False
 
     def __post_init__(self):

@@ -249,18 +249,22 @@ def _sublane_floor(act_bytes: int) -> int:
 
 @functools.lru_cache(maxsize=256)
 def _plan_kv_pages_cached(n_kv_heads: int, dh: int, rep: int,
-                          act_bytes: int, hw: HwSpec) -> KVPagePlan:
+                          act_bytes: int, tok_bytes: int,
+                          floor_bytes: int, hw: HwSpec) -> KVPagePlan:
     del n_kv_heads  # the kernel grids over KV heads; per-step cost is 1 head
     best = None
     best_key = None
     for ps in _PAGE_CANDIDATES:
-        if ps < _sublane_floor(act_bytes):
+        if ps < _sublane_floor(floor_bytes):
             continue
         # per grid step: stream the next (K, V) page pair for one KV head
-        # while the MXU runs QK^T + PV (rep query heads) on the current one
-        t_load = 2 * ps * dh * act_bytes / hw.hbm_bw
+        # while the MXU runs QK^T + PV (rep query heads) on the current one.
+        # ``tok_bytes`` is one token's K *or* V bytes for one head — dh x
+        # act_bytes dense, dh x 1 + 4 for the codes+scale quantized pool
+        # (the fused-dequant kernel streams codes, not values).
+        t_load = 2 * ps * tok_bytes / hw.hbm_bw
         t_compute = 4.0 * rep * ps * dh / hw.peak_bf16_flops
-        vmem = (2 * 2 * ps * dh * act_bytes      # double-buffered K+V pages
+        vmem = (2 * 2 * ps * tok_bytes           # double-buffered K+V pages
                 + rep * dh * act_bytes           # resident q
                 + rep * dh * 4 + 2 * rep * 4)    # f32 acc + (m, l) scratch
         if vmem > hw.vmem_bytes * VMEM_BUDGET_FRACTION:
@@ -276,19 +280,23 @@ def _plan_kv_pages_cached(n_kv_heads: int, dh: int, rep: int,
             best = KVPagePlan(ps, t_load <= t_compute, margin, int(vmem))
             best_key = key
     if best is None:                    # dh so large nothing fits: min tile
-        ps = _sublane_floor(act_bytes)
+        ps = _sublane_floor(floor_bytes)
         best = KVPagePlan(ps, False, 0.0, 0)
     return best
 
 
 def plan_kv_pages(n_kv_heads: int, dh: int, *, rep: int = 1,
-                  act_bytes: int = 2, hw: HwSpec = TPU_V5E) -> KVPagePlan:
+                  act_bytes: int = 2, kv_scheme: str | None = None,
+                  hw: HwSpec = TPU_V5E) -> KVPagePlan:
     """Tokens-per-page for the paged KV cache.
 
     Units: ``n_kv_heads``/``dh`` are element counts (the cache page is
     ``page_size x dh`` elements per KV head); ``rep = Hq // Hkv`` is the
     GQA expansion (query heads served per KV page); ``act_bytes`` is the
-    cache element width in bytes.
+    cache element width in bytes. ``kv_scheme`` (a core/spx scheme name)
+    switches the byte model to the quantized codes+scale page layout —
+    ``dh x 1 + 4`` bytes per token side instead of ``dh x act_bytes`` —
+    and floors the page at the uint8 sublane tile (32).
 
     Cached per argument tuple (lru); ``REPRO_PAGE_SIZE=N`` pins the page
     size, bypassing both the model and the cache. Always returns a plan —
@@ -300,7 +308,13 @@ def plan_kv_pages(n_kv_heads: int, dh: int, *, rep: int = 1,
     pinned = _env_override("REPRO_PAGE_SIZE", 1)
     if pinned is not None:
         return KVPagePlan(pinned[0], False, 0.0, 0)
-    return _plan_kv_pages_cached(n_kv_heads, dh, rep, act_bytes, hw)
+    if kv_scheme is not None:
+        from repro.core.spx import KV_CODE_BYTES, kv_token_side_bytes
+        tok_bytes, floor_bytes = kv_token_side_bytes(dh), KV_CODE_BYTES
+    else:
+        tok_bytes, floor_bytes = dh * act_bytes, act_bytes
+    return _plan_kv_pages_cached(n_kv_heads, dh, rep, act_bytes, tok_bytes,
+                                 floor_bytes, hw)
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,9 @@ The built-in kernels live in ``repro.kernels.ops`` and register themselves
 at import; ``resolve`` imports that module lazily so the registry package
 itself stays dependency-free. Current built-in ops: ``spx_matmul``,
 ``flash_attention``, ``paged_attention`` (serving decode over the paged KV
-cache — see docs/SERVING.md).
+cache — see docs/SERVING.md) and ``paged_attention_quant`` (same, over
+codes+scale quantized pools with fused codebook dequant —
+docs/QUANTIZATION.md).
 """
 from __future__ import annotations
 

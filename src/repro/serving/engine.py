@@ -14,9 +14,15 @@ Two KV layouts (docs/SERVING.md has the full lifecycle):
   attends through the block table via the paged-attention kernel. Memory
   scales with tokens in flight, not ``batch_slots x max_seq``.
 
-* **dense** (SSM/hybrid/enc-dec patterns, M-RoPE, quantized KV): the
-  original per-slot ``(B, Hkv, max_seq, dh)`` cache; prompts pad to the
-  slot length at admission and decode runs in lockstep.
+* **dense** (SSM/hybrid/enc-dec patterns, M-RoPE): the original per-slot
+  ``(B, Hkv, max_seq, dh)`` cache; prompts pad to the slot length at
+  admission and decode runs in lockstep.
+
+Either layout composes with the quantized KV cache (``rt.kv_quant`` +
+``rt.kv_scheme`` — uniform8 baseline or non-uniform SPx): paged pools
+store uint8 codes + per-token scale and decode through the fused-dequant
+paged-attention kernel; page/pool byte accounting follows the layout
+actually allocated (``kv_cache_dtype``, or codes+scale when quantized).
 
 Both layouts produce identical greedy outputs (regression-tested); the
 engine exposes throughput/occupancy metrics either way via ``metrics()``.
@@ -72,11 +78,18 @@ class ServeEngine:
                  rt: Runtime | None = None, seed: int = 0,
                  kv_layout: str = "auto", page_size: int | None = None,
                  pool_pages: int | None = None,
-                 prefill_chunk: int | None = None):
+                 prefill_chunk: int | None = None,
+                 kv_cache_dtype=jnp.float32):
         self.cfg = cfg
         self.rt = rt or Runtime(impl="auto", q_chunk=256)
         self.batch_slots = batch_slots
         self.max_seq = max_seq
+        self.kv_cache_dtype = jnp.dtype(kv_cache_dtype)
+        # KV quantization (scheme-parameterized, docs/QUANTIZATION.md):
+        # whenever rt.kv_quant is set the cache layout is uint8 codes +
+        # f32 scale and kv_cache_dtype is IGNORED by the cache allocators
+        # (metrics() then reports the layout, not the dtype arg)
+        self.kv_scheme = self.rt.kv_scheme if self.rt.kv_quant else None
         if quantize:
             params = quantize_params(params, quantize)
         self.params = params
@@ -87,7 +100,7 @@ class ServeEngine:
         if kv_layout == "paged" and not self._pageable():
             raise ValueError(
                 f"kv_layout='paged' needs an attention-only pattern without "
-                f"kv_quant/M-RoPE; {cfg.name} has pattern={cfg.pattern}")
+                f"M-RoPE; {cfg.name} has pattern={cfg.pattern}")
         self.kv_layout = kv_layout
 
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
@@ -105,8 +118,9 @@ class ServeEngine:
             self._init_dense()
 
     def _pageable(self) -> bool:
+        # kv_quant no longer excludes paging: quantized pools store
+        # codes+scale pages and decode through the fused-dequant kernel
         return (all(s.split("+")[0] == "attn" for s in self.cfg.pattern)
-                and not self.rt.kv_quant
                 and self.cfg.mrope_sections is None
                 and not self.cfg.enc_dec)
 
@@ -123,13 +137,17 @@ class ServeEngine:
         self._prefill_one = jax.jit(lm_mod.lm_prefill,
                                     static_argnums=(3, 4))
         self.caches = lm_mod.init_caches(self.cfg, self.batch_slots,
-                                         self.max_seq, dtype=jnp.float32)
+                                         self.max_seq,
+                                         dtype=self.kv_cache_dtype,
+                                         kv_quant=self.rt.kv_quant)
 
     def _init_paged(self, page_size, pool_pages, prefill_chunk):
         cfg = self.cfg
         rep = cfg.n_heads // cfg.n_kv_heads
-        plan = planner.plan_kv_pages(cfg.n_kv_heads, cfg.dh, rep=rep,
-                                     act_bytes=4)
+        plan = planner.plan_kv_pages(
+            cfg.n_kv_heads, cfg.dh, rep=rep,
+            act_bytes=self.kv_cache_dtype.itemsize,
+            kv_scheme=self.kv_scheme)
         self.page_size = min(page_size or plan.page_size, self.max_seq)
         self.pages_per_seq = -(-self.max_seq // self.page_size)
         # default pool = the dense engine's worst case, so paged-vs-dense
@@ -148,7 +166,8 @@ class ServeEngine:
                 "(check REPRO_PREFILL_CHUNK)")
         self.caches = lm_mod.paged_init_caches(cfg, self.pool.n_pages,
                                                self.page_size,
-                                               dtype=jnp.float32)
+                                               dtype=self.kv_cache_dtype,
+                                               kv_quant=self.rt.kv_quant)
         self._paged_step = jax.jit(lm_mod.lm_paged_step,
                                    static_argnums=(6, 7),
                                    donate_argnums=(5,))
@@ -232,7 +251,10 @@ class ServeEngine:
         """Throughput/latency/occupancy counters for the work so far."""
         lat = [r.t_done - r.t_enqueue for r in self.finished]
         ttft = [r.t_first_token - r.t_enqueue for r in self.finished]
-        per_tok = kv_bytes_per_token(self.cfg, 4)
+        # bytes follow the layout actually allocated: cache dtype, or the
+        # codes+scale quantized layout when rt.kv_quant is set
+        per_tok = kv_bytes_per_token(self.cfg, self.kv_cache_dtype,
+                                     kv_scheme=self.kv_scheme)
         if self.kv_layout == "paged":
             peak_kv = (self.pool.stats.peak_pages_in_use * self.page_size
                        * per_tok)
@@ -247,6 +269,11 @@ class ServeEngine:
             paged = {}
         return {
             "kv_layout": self.kv_layout,
+            "kv_scheme": self.kv_scheme or "none",
+            # what the cache arrays actually hold: the quantized layout
+            # ignores kv_cache_dtype (codes are uint8, scales f32)
+            "kv_cache_dtype": ("uint8+f32scale" if self.kv_scheme
+                               else self.kv_cache_dtype.name),
             "requests_finished": len(self.finished),
             "tokens_generated": self._tokens_out,
             "engine_steps": self._steps,
@@ -383,7 +410,8 @@ class ServeEngine:
                 # then splice its caches into the engine batch at `slot`
                 tok = jnp.asarray(req.prompt, jnp.int32)[None, :]
                 row_caches = lm_mod.init_caches(self.cfg, 1, self.max_seq,
-                                                dtype=jnp.float32)
+                                                dtype=self.kv_cache_dtype,
+                                                kv_quant=self.rt.kv_quant)
                 logits, row_caches = self._prefill_one(self.params, tok,
                                                        row_caches, self.cfg,
                                                        self.rt)

@@ -21,8 +21,9 @@ paged-attention kernel uses to gather K/V (see kernels/paged_attention.py).
 Unused table slots point at page 0 and are masked by the context length.
 
 Sizing (all byte helpers return bytes; counts are tokens/pages):
-``page_bytes_per_token`` x ``page_size`` x ``n_pages`` is the whole pool —
-see docs/SERVING.md for a worked example.
+``kv_bytes_per_token`` x ``page_size`` x ``n_pages`` is the whole pool —
+derived from the *actual* cache dtype (and the codes+scale layout when the
+pool is quantized); see docs/SERVING.md for a worked example.
 """
 from __future__ import annotations
 
@@ -30,25 +31,50 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import spx
+
 __all__ = ["PagePool", "kv_bytes_per_token", "pool_bytes", "PoolStats"]
 
 
-def kv_bytes_per_token(cfg, dtype_bytes: int = 4) -> int:
+def _elem_bytes(cache_dtype) -> int:
+    """Element width in bytes from a dtype (or a raw int, kept for the old
+    ``dtype_bytes`` call style)."""
+    if isinstance(cache_dtype, int):
+        return cache_dtype
+    return int(np.dtype(cache_dtype).itemsize)
+
+
+def kv_bytes_per_token(cfg, cache_dtype=4, *,
+                       kv_scheme: str | None = None) -> int:
     """Bytes of K+V cache one token occupies across every attention layer.
 
-    ``cfg``: an ArchConfig; ``dtype_bytes``: cache element width in bytes
-    (4 for the f32 serving cache, 2 for bf16). Counts attention mixers only
-    — SSM slots carry O(1) state, not per-token KV.
+    ``cfg``: an ArchConfig; ``cache_dtype``: the dtype the cache arrays are
+    actually allocated with (e.g. ``jnp.float32``/``jnp.bfloat16`` — pass
+    whatever went to ``init_caches``/``paged_init_caches``; a raw byte
+    count is accepted for back-compat). ``kv_scheme`` set (any core/spx
+    scheme name) switches to the quantized codes+scale layout: 1 byte of
+    uint8 code per element plus a 4-byte f32 scale per (token, KV head)
+    side — ``cache_dtype`` is then ignored, matching the allocation.
+    Counts attention mixers only — SSM slots carry O(1) state, not
+    per-token KV.
     """
     n_attn = sum(1 for s in cfg.pattern
                  if s.split("+")[0] in ("attn", "xdec"))
-    return 2 * cfg.n_periods * n_attn * cfg.n_kv_heads * cfg.dh * dtype_bytes
+    if kv_scheme is not None:
+        per_head = spx.kv_token_side_bytes(cfg.dh)   # codes + f32 scale
+    else:
+        per_head = cfg.dh * _elem_bytes(cache_dtype)
+    return 2 * cfg.n_periods * n_attn * cfg.n_kv_heads * per_head
 
 
-def pool_bytes(cfg, n_pages: int, page_size: int,
-               dtype_bytes: int = 4) -> int:
-    """Total device bytes of the paged K/V pool (all layers)."""
-    return n_pages * page_size * kv_bytes_per_token(cfg, dtype_bytes)
+def pool_bytes(cfg, n_pages: int, page_size: int, cache_dtype=4, *,
+               kv_scheme: str | None = None) -> int:
+    """Total device bytes of the paged K/V pool (all layers) — equal by
+    construction to the summed ``.nbytes`` of the arrays
+    ``models.lm.paged_init_caches`` allocates for the same geometry
+    (regression-tested)."""
+    return n_pages * page_size * kv_bytes_per_token(cfg, cache_dtype,
+                                                    kv_scheme=kv_scheme)
 
 
 @dataclasses.dataclass
@@ -132,7 +158,19 @@ class PagePool:
 
     def release(self, seq_id: int) -> int:
         """Return a finished sequence's pages to the free list. Returns the
-        number of pages reclaimed."""
+        number of pages reclaimed.
+
+        Raises a descriptive ``KeyError`` when ``seq_id`` has no live
+        allocation — a double release or a never-admitted sequence. This
+        is deliberately an error rather than an idempotent no-op: the
+        engine releases exactly once per finished sequence, so a stray
+        release means a scheduler bug that silent page accounting would
+        hide. Stats are untouched on the error path."""
+        if seq_id not in self._seq_pages:
+            raise KeyError(
+                f"seq {seq_id}: no live page allocation to release "
+                f"(double release, or never admitted); live seqs: "
+                f"{sorted(self._seq_pages)}")
         pages = self._seq_pages.pop(seq_id)
         self._free.extend(reversed(pages))
         self.stats.pages_in_use -= len(pages)
