@@ -11,6 +11,12 @@ bytes, and checking greedy-output agreement against dense-f32 (paging is a
 memory-layout change and 8-bit SPx KV must preserve greedy outputs on this
 workload; both are asserted on the ref backend).
 
+A second scenario drives a batch of requests sharing a page-aligned
+system prompt through the paged engine with the prefix cache off vs on,
+asserting identical greedy outputs, prefill-tokens-skipped > 0, and a
+strictly lower peak page count with sharing — the acceptance criteria for
+shared-prefix KV page reuse (docs/SERVING.md).
+
 Standalone:  PYTHONPATH=src python -m benchmarks.serving_bench
 From run.py: writes BENCH_serving.json at the repo root.
 """
@@ -136,10 +142,86 @@ def run(csv_rows, *, requests: int = 10, slots: int = 4, max_seq: int = 64,
           f"dense-f32/paged-spx {ratio_dense:.2f}x")
     csv_rows.append(("serving/kv_ratio_bf16_over_spx", 0.0, ratio_spx))
 
+    result["prefix_cache"] = _prefix_cache_scenario(csv_rows, params, cfg,
+                                                    rt)
+
     with open(out_path, "w") as fh:
         json.dump(result, fh, indent=2, sort_keys=True)
     print(f"  wrote {out_path}")
     return result
+
+
+def _prefix_cache_scenario(csv_rows, params, cfg, rt, *, requests: int = 8,
+                           slots: int = 2, max_seq: int = 64,
+                           new_tokens: int = 4, seed: int = 3) -> dict:
+    """Shared-system-prompt scenario: every request carries the same
+    page-aligned 24-token system prompt (one of them is the *bare* system
+    prompt, which exercises the copy-on-write path). Request 0 primes the
+    pool alone, then the rest arrive as a wave through ``slots`` batch
+    slots — with the prefix cache on, every later request maps the cached
+    system-prompt pages instead of re-prefilling them.
+
+    Asserted (acceptance criteria, deterministic on any backend — these
+    are scheduling/accounting claims, not numerics): greedy outputs
+    identical with sharing on vs off, prefill-tokens-skipped > 0, and
+    peak KV pages strictly lower with sharing."""
+    from repro.serving.engine import Request, ServeEngine
+
+    page_size = 8
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 3 * page_size) \
+        .astype(np.int32)
+    prompts = [sys_prompt.copy()]                    # primer
+    prompts += [np.concatenate(
+        [sys_prompt,
+         rng.integers(0, cfg.vocab_size,
+                      int(rng.integers(1, 6))).astype(np.int32)])
+        for _ in range(requests - 2)]
+    prompts.append(sys_prompt.copy())                # bare again -> COW
+
+    outputs, mets = {}, {}
+    print("\n== serving: shared system prompt, prefix cache off vs on ==")
+    for on in (False, True):
+        eng = ServeEngine(params, cfg, batch_slots=slots, max_seq=max_seq,
+                          quantize="sp2_4", rt=rt, kv_layout="paged",
+                          page_size=page_size, prefix_cache=on)
+        eng.submit(Request(rid=0, prompt=prompts[0],
+                           max_new_tokens=new_tokens))
+        eng.run()                                    # prime the pool
+        for i, p in enumerate(prompts[1:], start=1):
+            eng.submit(Request(rid=i, prompt=p,
+                               max_new_tokens=new_tokens))
+        eng.run()
+        outputs[on] = {r.rid: r.output for r in eng.finished}
+        m = eng.metrics()
+        mets[on] = m
+        tag = "on " if on else "off"
+        print(f"  prefix-cache {tag}: peak {m['peak_kv_pages']:3d} pages  "
+              f"hits {m['prefix_hits']}  skipped "
+              f"{m['prefill_tokens_skipped']} tok  cow {m['cow_copies']}  "
+              f"{m['tokens_per_s']:8.1f} tok/s")
+
+    assert outputs[True] == outputs[False], \
+        "prefix cache changed greedy outputs"
+    assert mets[False]["prefill_tokens_skipped"] == 0
+    assert mets[True]["prefill_tokens_skipped"] > 0, \
+        "prefix cache never skipped prefill work"
+    assert mets[True]["peak_kv_pages"] < mets[False]["peak_kv_pages"], \
+        (mets[True]["peak_kv_pages"], mets[False]["peak_kv_pages"])
+    assert mets[True]["cow_copies"] >= 1, "COW path never exercised"
+
+    hit_rate = mets[True]["prefix_hits"] / requests
+    csv_rows.append(("serving/prefix_hit_rate", 0.0, hit_rate))
+    csv_rows.append(("serving/prefix_tokens_skipped", 0.0,
+                     mets[True]["prefill_tokens_skipped"]))
+    csv_rows.append(("serving/prefix_peak_pages_ratio", 0.0,
+                     mets[True]["peak_kv_pages"]
+                     / mets[False]["peak_kv_pages"]))
+    return {"config": {"requests": requests, "batch_slots": slots,
+                       "page_size": page_size, "system_prompt_tokens":
+                       int(len(sys_prompt)), "new_tokens": new_tokens},
+            "hit_rate": hit_rate,
+            "off": mets[False], "on": mets[True]}
 
 
 if __name__ == "__main__":

@@ -40,20 +40,32 @@ def main(argv=None):
     data.close()
 
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 16)))
-               .astype(np.int32) for _ in range(args.requests)]
+    # every request opens with the same 16-token system prompt — the
+    # prefix-cache axis below shares its KV pages across requests
+    sys_prompt = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    prompts = [np.concatenate(
+        [sys_prompt,
+         rng.integers(0, cfg.vocab_size,
+                      int(rng.integers(4, 16))).astype(np.int32)])
+        for _ in range(args.requests)]
 
     results = {}
     # axes: weights (dense vs sp2_4) x KV (dense slots, paged, paged +
-    # SPx-quantized codes+scale pages — docs/QUANTIZATION.md)
-    for scheme, layout, kvq in ((None, "dense", False),
-                                ("sp2_4", "dense", False),
-                                ("sp2_4", "paged", False),
-                                ("sp2_4", "paged", True)):
-        tag = f"{scheme or 'dense'}/{layout}{'+kvq' if kvq else ''}"
+    # SPx-quantized codes+scale pages — docs/QUANTIZATION.md) x shared
+    # prefix pages (docs/SERVING.md)
+    for scheme, layout, kvq, share in ((None, "dense", False, False),
+                                       ("sp2_4", "dense", False, False),
+                                       ("sp2_4", "paged", False, False),
+                                       ("sp2_4", "paged", True, False),
+                                       ("sp2_4", "paged", False, True)):
+        tag = (f"{scheme or 'dense'}/{layout}{'+kvq' if kvq else ''}"
+               f"{'+share' if share else ''}")
         ert = rt.replace(kv_quant=True, kv_scheme="spx_8_x3") if kvq else rt
+        # explicit bool (not None) so a REPRO_PREFIX_CACHE=1 environment
+        # can't silently turn sharing on for the private-page axes
         eng = ServeEngine(params, cfg, batch_slots=4, max_seq=64,
-                          quantize=scheme, rt=ert, kv_layout=layout)
+                          quantize=scheme, rt=ert, kv_layout=layout,
+                          prefix_cache=share)
         t0 = time.time()
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p,
@@ -66,6 +78,9 @@ def main(argv=None):
         extra = (f" pages {m['n_pages']}x{m['page_size']} "
                  f"occ {m['occupancy_mean']:.2f}"
                  if layout == "paged" else "")
+        if share:
+            extra += (f" hits {m['prefix_hits']}"
+                      f" skipped {m['prefill_tokens_skipped']}tok")
         print(f"[serve_llm] {tag:12s}: {n_tok} tokens in {dt:.2f}s "
               f"({n_tok / dt:.0f} tok/s) peak KV "
               f"{m['peak_kv_bytes'] / 2**10:.0f} KiB{extra}")
@@ -84,11 +99,17 @@ def main(argv=None):
         np.mean(np.array(results["sp2_4/paged"][i])
                 == np.array(results["sp2_4/paged+kvq"][i]))
         for i in range(args.requests)])
+    # shared prefix pages vs private pages (layout-internal axis; exact)
+    agree_share = np.mean([
+        results["sp2_4/paged"][i] == results["sp2_4/paged+share"][i]
+        for i in range(args.requests)])
     print(f"[serve_llm] dense vs sp2_4 greedy-token agreement: {agree_q:.2f}")
     print(f"[serve_llm] dense vs paged KV exact-output agreement: "
           f"{agree_p:.2f}")
     print(f"[serve_llm] f32 vs SPx-quantized KV pages token agreement: "
           f"{agree_kvq:.2f}")
+    print(f"[serve_llm] private vs shared prefix pages exact-output "
+          f"agreement: {agree_share:.2f}")
     return results
 
 

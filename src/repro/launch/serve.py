@@ -9,9 +9,14 @@ Weight quantization (--scheme) and KV-cache quantization (--kv-quant +
 --kv-scheme, uniform8 baseline or non-uniform SPx) are independent axes;
 both compose with either KV layout — see docs/QUANTIZATION.md.
 
+--prefix-cache turns on shared-prefix KV page reuse: requests whose
+prompts share a page-aligned prefix (a common system prompt) map the same
+physical pages instead of re-prefilling them — docs/SERVING.md.
+
 Env knobs that reach serving: REPRO_PAGE_SIZE (tokens per KV page),
-REPRO_PREFILL_CHUNK (chunked-prefill length), REPRO_BLOCKS_* /
-REPRO_AUTOTUNE (kernel tiles) — see docs/SERVING.md.
+REPRO_PREFILL_CHUNK (chunked-prefill length), REPRO_PREFIX_CACHE=1
+(prefix cache default), REPRO_BLOCKS_* / REPRO_AUTOTUNE (kernel tiles) —
+see docs/SERVING.md.
 """
 from __future__ import annotations
 
@@ -48,6 +53,13 @@ def main(argv=None):
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="KV pool size in pages (default: dense-equivalent)")
     ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--prefix-cache", action="store_true", default=None,
+                    help="share page-aligned prompt-prefix KV pages across "
+                         "requests (paged layout only; REPRO_PREFIX_CACHE=1 "
+                         "sets the default)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend the same N-token system prompt to every "
+                         "synthetic request (exercises --prefix-cache)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="quantize the KV cache to codes+scale pages")
     ap.add_argument("--kv-scheme", default="spx_8_x3",
@@ -77,15 +89,27 @@ def main(argv=None):
                       pool_pages=args.pool_pages,
                       prefill_chunk=args.prefill_chunk,
                       kv_cache_dtype=(jnp.bfloat16 if args.kv_dtype == "bf16"
-                                      else jnp.float32))
+                                      else jnp.float32),
+                      prefix_cache=args.prefix_cache)
 
     rng = np.random.default_rng(args.seed)
+    sys_prompt = (rng.integers(0, cfg.vocab_size, args.shared_prefix)
+                  .astype(np.int32))
+    # each request must fit shared prefix + tail + new tokens in max_seq
+    tail_cap = args.max_seq - args.shared_prefix - args.new_tokens
+    if tail_cap < 2:
+        raise SystemExit(
+            f"--shared-prefix {args.shared_prefix} leaves no room for a "
+            f"prompt tail (max-seq {args.max_seq}, new-tokens "
+            f"{args.new_tokens})")
+    hi = max(2, min(args.max_seq // 4, tail_cap))
     t0 = time.time()
     for i in range(args.requests):
-        plen = int(rng.integers(4, args.max_seq // 4))
-        eng.submit(Request(rid=i,
-                           prompt=rng.integers(0, cfg.vocab_size, plen)
-                           .astype(np.int32),
+        plen = int(rng.integers(min(4, hi - 1), hi))
+        prompt = np.concatenate(
+            [sys_prompt,
+             rng.integers(0, cfg.vocab_size, plen).astype(np.int32)])
+        eng.submit(Request(rid=i, prompt=prompt,
                            max_new_tokens=args.new_tokens))
     done = eng.run()
     dt = time.time() - t0
@@ -101,6 +125,10 @@ def main(argv=None):
               f"peak {m['occupancy_peak']:.2f}, "
               f"peak KV {m['peak_kv_bytes'] / 2**20:.2f} MiB, "
               f"denials {m['admission_denials']}")
+        if m["prefix_cache"]:
+            print(f"[serve] prefix cache: {m['prefix_hits']} hits, "
+                  f"{m['prefill_tokens_skipped']} prefill tokens skipped, "
+                  f"{m['cow_copies']} COW copies")
     print("[serve] metrics: " + json.dumps(m, sort_keys=True))
     return done
 

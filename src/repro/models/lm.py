@@ -24,7 +24,8 @@ from repro.nn.transformer import (slot_init_cache, slot_init_paged_cache,
                                   stack_prefill, stack_init)
 
 __all__ = ["lm_init", "lm_loss", "lm_logits", "lm_prefill", "lm_decode_step",
-           "init_caches", "paged_init_caches", "lm_paged_step", "chunked_ce"]
+           "init_caches", "paged_init_caches", "lm_paged_step",
+           "paged_copy_page", "chunked_ce"]
 
 LOSS_CHUNK = 256
 AUX_WEIGHT = 0.01
@@ -195,6 +196,21 @@ def paged_init_caches(cfg: ArchConfig, n_pages: int, page_size: int,
     return [slot_init_paged_cache(slot, cfg, n_pages, page_size, dtype,
                                   kv_quant=kv_quant)
             for slot in cfg.pattern]
+
+
+def paged_copy_page(caches, src, dst):
+    """Copy one physical KV page ``src`` -> ``dst`` across every layer,
+    period and head (K and V — and codes+scale pairs when the pool is
+    quantized). This is the serving engine's copy-on-write: a request
+    whose prompt fully matches a shared page up to its last token gets a
+    private copy to finish (and later decode into) so the shared original
+    stays immutable. Page index is axis 1 of every paged cache leaf
+    (``(P, n_pages, Hkv, page_size, dh)``); ``src``/``dst`` may be traced
+    scalars, so one jit of this function serves every (src, dst) pair.
+    """
+    def cp(leaf):
+        return leaf.at[:, dst].set(leaf[:, src])
+    return jax.tree_util.tree_map(cp, caches)
 
 
 def lm_paged_step(params, tokens, ctx_len, block_table, n_valid, caches,

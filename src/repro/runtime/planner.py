@@ -50,9 +50,10 @@ from repro.core.pipeline import HwSpec, TPU_V5E, plan_matmul_blocks
 
 __all__ = [
     "MatmulBlocks", "AttentionBlocks", "KVPagePlan", "plan_matmul",
-    "plan_attention", "plan_kv_pages", "matmul_candidates",
-    "autotune_enabled", "measured_best", "measured_plan",
-    "clear_plan_cache", "DEFAULT_BM", "VMEM_BUDGET_FRACTION",
+    "plan_attention", "plan_kv_pages", "plan_seq_pages",
+    "matmul_candidates", "autotune_enabled", "measured_best",
+    "measured_plan", "clear_plan_cache", "DEFAULT_BM",
+    "VMEM_BUDGET_FRACTION",
 ]
 
 # bm candidate ceiling for tiny-M problems (M is padded to the chosen bm,
@@ -315,6 +316,30 @@ def plan_kv_pages(n_kv_heads: int, dh: int, *, rep: int = 1,
         tok_bytes, floor_bytes = dh * act_bytes, act_bytes
     return _plan_kv_pages_cached(n_kv_heads, dh, rep, act_bytes, tok_bytes,
                                  floor_bytes, hw)
+
+
+def plan_seq_pages(n_tokens: int, page_size: int, *,
+                   shared_tokens: int = 0) -> int:
+    """Fresh pages a sequence must reserve at admission.
+
+    The worst-case reservation is ``ceil(n_tokens / page_size)`` pages;
+    a matched shared prefix of ``shared_tokens`` tokens maps
+    ``shared_tokens // page_size`` of them from the pool's prefix index
+    instead (refcount bump, no new page, no prefill work). The floor
+    deliberately bills a *partially* reused last page as fresh: that is
+    the copy-on-write case — the engine copies the matched page into a
+    private one before the sequence writes into it — so the COW
+    destination is correctly part of the fresh reservation.
+
+    Units are tokens and pages, which makes the count layout-neutral: a
+    page holds ``page_size`` tokens whether its device arrays store dense
+    ``act_bytes`` elements or the quantized codes+scale pair
+    (``plan_kv_pages`` sizes both layouts to the same token geometry), so
+    one reservation model covers plain and kv_quant pools.
+    """
+    if page_size < 1 or n_tokens < 0 or not 0 <= shared_tokens <= n_tokens:
+        raise ValueError((n_tokens, page_size, shared_tokens))
+    return -(-n_tokens // page_size) - shared_tokens // page_size
 
 
 # ---------------------------------------------------------------------------

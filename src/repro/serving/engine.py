@@ -18,6 +18,17 @@ Two KV layouts (docs/SERVING.md has the full lifecycle):
   ``(B, Hkv, max_seq, dh)`` cache; prompts pad to the slot length at
   admission and decode runs in lockstep.
 
+The paged layout optionally shares KV pages across requests
+(``prefix_cache=True`` / ``--prefix-cache`` / ``REPRO_PREFIX_CACHE=1``):
+admission matches the prompt against the pool's prefix index, maps the
+matched full pages into the sequence's page list (refcount bump, zero
+prefill work), chunk-prefills only the unmatched tail, and copy-on-writes
+the final matched page when the whole prompt is page-aligned-identical
+(the last prompt token must be re-run for logits and would otherwise
+write into a shared page). Greedy outputs are identical with sharing on
+or off (regression-tested) — sharing changes where bytes live, never
+what they hold.
+
 Either layout composes with the quantized KV cache (``rt.kv_quant`` +
 ``rt.kv_scheme`` — uniform8 baseline or non-uniform SPx): paged pools
 store uint8 codes + per-token scale and decode through the fused-dequant
@@ -79,7 +90,8 @@ class ServeEngine:
                  kv_layout: str = "auto", page_size: int | None = None,
                  pool_pages: int | None = None,
                  prefill_chunk: int | None = None,
-                 kv_cache_dtype=jnp.float32):
+                 kv_cache_dtype=jnp.float32,
+                 prefix_cache: bool | None = None):
         self.cfg = cfg
         self.rt = rt or Runtime(impl="auto", q_chunk=256)
         self.batch_slots = batch_slots
@@ -102,6 +114,21 @@ class ServeEngine:
                 f"kv_layout='paged' needs an attention-only pattern without "
                 f"M-RoPE; {cfg.name} has pattern={cfg.pattern}")
         self.kv_layout = kv_layout
+
+        # shared-prefix KV page reuse (paged only). None = read the env
+        # default; an env-enabled cache degrades silently to off for a
+        # dense engine, an explicit True there is a caller error.
+        explicit_prefix = prefix_cache is not None
+        if prefix_cache is None:
+            prefix_cache = os.environ.get(
+                "REPRO_PREFIX_CACHE", "").lower() in ("1", "true")
+        if prefix_cache and kv_layout != "paged":
+            if explicit_prefix:
+                raise ValueError(
+                    "prefix_cache=True needs kv_layout='paged' — the dense "
+                    "layout has per-slot rows, nothing to share")
+            prefix_cache = False
+        self.prefix_cache = bool(prefix_cache)
 
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int64)   # tokens in cache
@@ -171,11 +198,22 @@ class ServeEngine:
         self._paged_step = jax.jit(lm_mod.lm_paged_step,
                                    static_argnums=(6, 7),
                                    donate_argnums=(5,))
+        # copy-on-write page duplication; src/dst ride as traced scalars
+        # so the one compile covers every page pair
+        self._copy_page = jax.jit(lm_mod.paged_copy_page,
+                                  donate_argnums=(0,))
         self.block_tables = np.zeros(
             (self.batch_slots, self.pages_per_seq), np.int32)
         # per-slot prefill progress: tokens of the prompt already fed;
         # -1 means the slot is decoding
         self._fed = np.full(self.batch_slots, -1, np.int64)
+        # prefix-cache work counters (metrics(); reset_metrics() zeroes)
+        self._prefix_hits = 0
+        self._prefill_skipped = 0
+        self._cow_copies = 0
+        # per-request chain keys, hashed once at first admission attempt
+        # and reused by every retry tick and prefill-chunk registration
+        self._prompt_keys: dict[int, list[bytes]] = {}
 
     # -- public API ----------------------------------------------------------
 
@@ -203,7 +241,11 @@ class ServeEngine:
             # silently overwrite another request's output (dense)
             raise ValueError(f"request id {req.rid} already in flight")
         if self.kv_layout == "paged":
-            need = self.pool.pages_for(self._worst_case_tokens(req))
+            # worst-case reservation (planner-owned model): assume no
+            # shared prefix — the index is volatile, so a match visible
+            # now may be evicted before this request reaches admission
+            need = planner.plan_seq_pages(self._worst_case_tokens(req),
+                                          self.page_size)
             if need > self.pool.n_pages:
                 # could never be admitted even against an empty pool —
                 # reject now instead of busy-spinning run() forever
@@ -246,6 +288,9 @@ class ServeEngine:
         if self.kv_layout == "paged":
             self.pool.stats.peak_pages_in_use = self.pool.stats.pages_in_use
             self.pool.stats.admission_denials = 0
+            self._prefix_hits = 0
+            self._prefill_skipped = 0
+            self._cow_copies = 0
 
     def metrics(self) -> dict:
         """Throughput/latency/occupancy counters for the work so far."""
@@ -261,9 +306,14 @@ class ServeEngine:
             paged = {"page_size": self.page_size,
                      "n_pages": self.pool.n_pages,
                      "pages_per_seq": self.pages_per_seq,
+                     "peak_kv_pages": self.pool.stats.peak_pages_in_use,
                      "admission_denials":
                          self.pool.stats.admission_denials,
-                     "prefill_chunk": self.prefill_chunk}
+                     "prefill_chunk": self.prefill_chunk,
+                     "prefix_cache": self.prefix_cache,
+                     "prefix_hits": self._prefix_hits,
+                     "prefill_tokens_skipped": self._prefill_skipped,
+                     "cow_copies": self._cow_copies}
         else:
             peak_kv = self.batch_slots * self.max_seq * per_tok
             paged = {}
@@ -296,25 +346,66 @@ class ServeEngine:
 
     # -- paged internals -----------------------------------------------------
 
+    def _match_prefix(self, req: Request):
+        """-> (shared full pages, COW source page or None, matched tokens).
+
+        The pool's index matches page-aligned full pages of the prompt.
+        When the *whole* prompt is covered (page-aligned identical
+        prompt), the last matched page cannot simply be mapped: the final
+        prompt token must be re-run to produce first-token logits, and
+        its KV write would land in the shared page. That page becomes a
+        copy-on-write source instead — admission copies it into a private
+        fresh page and prefill resumes at the last token. Matched tokens
+        are therefore always < len(prompt), so every admitted request
+        flows through the normal prefill-completion path."""
+        keys = self._prompt_keys.get(req.rid)
+        if keys is None:
+            keys = self._prompt_keys[req.rid] = \
+                self.pool.prompt_keys(req.prompt)
+        cand = self.pool.match_prefix(req.prompt, keys=keys)
+        if not cand:
+            return [], None, 0
+        matched = len(cand) * self.page_size
+        if matched < len(req.prompt):
+            return cand, None, matched
+        return cand[:-1], cand[-1], len(req.prompt) - 1
+
     def _admit_paged(self):
         """Admission is page-budget-based: the queue head is admitted when
         a slot is free AND the pool covers its worst-case token footprint
         (prompt + max_new, capped at max_seq — reserved up front so decode
-        can never OOM mid-sequence). FIFO: a blocked head blocks the queue
-        (no starvation of long prompts by short ones)."""
+        can never OOM mid-sequence) minus any shared-prefix pages the
+        prefix cache maps in place of fresh ones
+        (``planner.plan_seq_pages``). FIFO: a blocked head blocks the
+        queue (no starvation of long prompts by short ones)."""
         for slot in range(self.batch_slots):
             if not self.queue:
                 return
             if self.slot_req[slot] is not None:
                 continue
             req = self.queue[0]
-            if self.pool.allocate(req.rid,
-                                  self._worst_case_tokens(req)) is None:
+            shared, cow_src, matched = ([], None, 0)
+            if self.prefix_cache:
+                shared, cow_src, matched = self._match_prefix(req)
+            pages = self.pool.allocate(req.rid,
+                                       self._worst_case_tokens(req),
+                                       shared_prefix=shared)
+            if pages is None:
                 return                      # wait for a release
+            if cow_src is not None:
+                # private copy of the partially-reused last page; the
+                # re-run final token overwrites its own (identical) KV
+                self.caches = self._copy_page(
+                    self.caches, jnp.int32(cow_src),
+                    jnp.int32(pages[len(shared)]))
+                self._cow_copies += 1
+            if matched:
+                self._prefix_hits += 1
+                self._prefill_skipped += matched
             self.queue.pop(0)
             self.slot_req[slot] = req
-            self.slot_pos[slot] = 0
-            self._fed[slot] = 0
+            self.slot_pos[slot] = matched
+            self._fed[slot] = matched
             self.block_tables[slot] = self.pool.block_table_row(
                 req.rid, self.pages_per_seq)
 
@@ -349,6 +440,15 @@ class ServeEngine:
             req = self.slot_req[i]
             self._fed[i] += chunk[i]
             self.slot_pos[i] = self._fed[i]
+            if self.prefix_cache:
+                # index every prompt page this chunk completed — full
+                # prompt pages are immutable from here on, so queued
+                # requests with the same prefix can start sharing them
+                # on the very next admission tick (before _maybe_finish:
+                # a released page stays indexed and revivable)
+                self.pool.register_prefix(
+                    req.rid, req.prompt, int(self._fed[i]),
+                    keys=self._prompt_keys.get(req.rid))
             if self._fed[i] == len(req.prompt):
                 self._fed[i] = -1           # -> decoding
                 first = self._pick_token(logits[i], req)
@@ -395,9 +495,10 @@ class ServeEngine:
         self.finished.append(req)
         self.slot_req[slot] = None
         if self.kv_layout == "paged":
-            self.pool.release(req.rid)      # pages recycle immediately
+            self.pool.release(req.rid)      # zero-ref pages recycle now
             self.block_tables[slot] = 0
             self._fed[slot] = -1
+            self._prompt_keys.pop(req.rid, None)
 
     # -- dense internals -----------------------------------------------------
 

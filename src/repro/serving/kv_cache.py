@@ -9,8 +9,17 @@ the **host-side** allocator that maps sequences onto pages:
 
   * each sequence owns an ordered list of physical page indices; logical
     token position ``p`` lives at ``(pages[p // page_size], p % page_size)``
-  * a free list recycles pages the moment a sequence finishes (LIFO, so
-    recently-touched pages are reused first)
+  * pages are **reference counted**: a full page holding a page-aligned
+    block of prompt tokens is immutable once written, so later requests
+    with the same prompt prefix map the *same* physical page instead of
+    re-prefilling it (``match_prefix``/``register_prefix`` keep a prefix
+    index of chain hashes over page-aligned token blocks); a page recycles
+    only when its refcount hits zero
+  * a free list recycles pages the moment their last owner finishes (LIFO,
+    so recently-touched pages are reused first). A freed page *stays in
+    the prefix index* until the free list hands it out again (lazy
+    eviction) — a system prompt survives in the pool between request
+    waves for free
   * admission asks ``can_admit(n_tokens)`` — a request whose worst-case
     footprint exceeds the currently free pages stays queued instead of
     crashing or evicting others
@@ -19,6 +28,8 @@ The *device* side consumes only the ``block_table`` this produces: an
 ``(n_seqs, pages_per_seq)`` int32 array of physical page indices that the
 paged-attention kernel uses to gather K/V (see kernels/paged_attention.py).
 Unused table slots point at page 0 and are masked by the context length.
+Shared pages appear in several rows at once — the device neither knows nor
+cares; ownership and copy-on-write live here and in the engine.
 
 Sizing (all byte helpers return bytes; counts are tokens/pages):
 ``kv_bytes_per_token`` x ``page_size`` x ``n_pages`` is the whole pool —
@@ -28,10 +39,12 @@ pool is quantized); see docs/SERVING.md for a worked example.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 
 from repro.core import spx
+from repro.runtime import planner
 
 __all__ = ["PagePool", "kv_bytes_per_token", "pool_bytes", "PoolStats"]
 
@@ -79,7 +92,9 @@ def pool_bytes(cfg, n_pages: int, page_size: int, cache_dtype=4, *,
 
 @dataclasses.dataclass
 class PoolStats:
-    """Allocator counters. Pages are counted in pages, not bytes."""
+    """Allocator counters. Pages are counted in pages, not bytes;
+    ``pages_in_use`` counts *distinct physical* pages (a page shared by
+    three sequences counts once — that is the whole point of sharing)."""
     n_pages: int
     page_size: int
     pages_in_use: int = 0
@@ -87,6 +102,7 @@ class PoolStats:
     alloc_calls: int = 0
     release_calls: int = 0
     admission_denials: int = 0      # distinct sequences denied, not ticks
+    prefix_pages_shared: int = 0    # cumulative refcount bumps from sharing
 
     @property
     def occupancy(self) -> float:
@@ -98,10 +114,19 @@ class PoolStats:
 
 
 class PagePool:
-    """Host-side page allocator: free list + per-sequence page lists.
+    """Host-side page allocator: free list + refcounts + per-sequence page
+    lists + prefix index.
 
     Deterministic (LIFO free list), single-threaded — the engine drives it
-    from its scheduling loop. All methods are O(pages touched).
+    from its scheduling loop. All methods are O(pages touched), except the
+    O(pool) free-list removal when a cached free page is revived and the
+    O(prefix tokens) hashing in ``match_prefix``/``register_prefix``.
+
+    Mutations are transactional: every failure path — a capacity denial
+    (returns None) or a caller error (raises) — leaves the free list,
+    refcounts, sequence maps, prefix index and stats exactly as they were
+    before the call. Validation runs before the first pop, so a partial
+    allocation can never leak pages (regression-tested).
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -110,55 +135,189 @@ class PagePool:
         self.n_pages = n_pages
         self.page_size = page_size
         self._free: list[int] = list(range(n_pages - 1, -1, -1))
+        self._ref: list[int] = [0] * n_pages
         self._seq_pages: dict[int, list[int]] = {}
+        # prefix index: chain hash of a page-aligned token prefix -> the
+        # physical page holding its last block. _page_key is the inverse
+        # (a page carries at most one index entry) so eviction is O(1).
+        self._index: dict[bytes, int] = {}
+        self._page_key: dict[int, bytes] = {}
         self._denied: set[int] = set()
         self.stats = PoolStats(n_pages, page_size)
 
     # -- queries -------------------------------------------------------------
 
     def pages_for(self, n_tokens: int) -> int:
-        """Pages needed to hold ``n_tokens`` tokens (ceil)."""
-        return -(-n_tokens // self.page_size)
+        """Pages needed to hold ``n_tokens`` tokens (ceil) with no shared
+        prefix — the planner owns the page-count model."""
+        return planner.plan_seq_pages(n_tokens, self.page_size)
 
     def free_pages(self) -> int:
         return len(self._free)
 
     def can_admit(self, n_tokens: int) -> bool:
         """Would ``allocate`` succeed for a new ``n_tokens``-token
-        reservation right now?"""
+        reservation right now (no shared prefix)?"""
         return self.pages_for(n_tokens) <= len(self._free)
 
     def seq_page_count(self, seq_id: int) -> int:
         return len(self._seq_pages.get(seq_id, ()))
 
+    def seq_pages(self, seq_id: int) -> tuple[int, ...]:
+        """The sequence's physical page list (copy; () when not live)."""
+        return tuple(self._seq_pages.get(seq_id, ()))
+
+    def ref_count(self, page: int) -> int:
+        """Live owners of a physical page (0 = free or cached-free)."""
+        return self._ref[page]
+
+    def cached_prefix_pages(self) -> int:
+        """Pages currently carrying a prefix-index entry (live + cached)."""
+        return len(self._index)
+
+    # -- prefix index --------------------------------------------------------
+
+    def _page_keys(self, tokens, n_full: int) -> list[bytes]:
+        """Chain keys for the first ``n_full`` page-aligned blocks of
+        ``tokens``: key k hashes blocks 0..k, so equal keys mean equal
+        *prefixes*, not just equal blocks (positional KV — RoPE — makes a
+        block's cache content depend on everything before it)."""
+        t = np.ascontiguousarray(np.asarray(tokens, dtype=np.int32))
+        h = hashlib.sha1()
+        keys = []
+        for k in range(n_full):
+            h.update(t[k * self.page_size:(k + 1) * self.page_size]
+                     .tobytes())
+            keys.append(h.digest())
+        return keys
+
+    def prompt_keys(self, tokens) -> list[bytes]:
+        """Chain keys for every full page of ``tokens``. Hashing is O(len)
+        — compute once per prompt and hand the result to ``match_prefix``
+        / ``register_prefix`` so a blocked queue head retried every tick
+        (or a prompt registered chunk by chunk) doesn't re-hash from
+        block 0 each time."""
+        return self._page_keys(tokens, len(tokens) // self.page_size)
+
+    def match_prefix(self, tokens, *, keys=None) -> list[int]:
+        """Physical pages holding the longest indexed page-aligned prefix
+        of ``tokens`` (possibly all ``len(tokens) // page_size`` full
+        pages). Read-only — pass the result to ``allocate(...,
+        shared_prefix=...)`` in the same scheduling tick to claim it (a
+        matched page may be a cached *free* page; an intervening fresh
+        allocation could evict it). ``keys``: precomputed
+        ``prompt_keys(tokens)``, to skip re-hashing."""
+        if keys is None:
+            keys = self.prompt_keys(tokens)
+        pages: list[int] = []
+        for key in keys:
+            page = self._index.get(key)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def register_prefix(self, seq_id: int, tokens,
+                        n_tokens: int | None = None, *, keys=None):
+        """Index the full pages covering the first ``n_tokens`` of
+        ``tokens`` (a prompt) for sequence ``seq_id``. Call only once the
+        pages are actually written (the engine registers after each
+        prefill chunk). Idempotent: already-indexed prefixes (this
+        sequence's own shared pages included) are skipped, and a page
+        never carries more than one index entry. ``keys``: precomputed
+        ``prompt_keys(tokens)``, to skip re-hashing."""
+        if seq_id not in self._seq_pages:
+            raise KeyError(f"seq {seq_id}: not live, cannot register")
+        pages = self._seq_pages[seq_id]
+        n = len(tokens) if n_tokens is None else min(n_tokens, len(tokens))
+        n_full = n // self.page_size
+        if keys is None:
+            keys = self._page_keys(tokens, n_full)
+        for k, key in enumerate(keys[:n_full]):
+            if key in self._index or pages[k] in self._page_key:
+                continue
+            self._index[key] = pages[k]
+            self._page_key[pages[k]] = key
+
+    def _evict(self, page: int):
+        """Drop the page's prefix-index entry (it is about to be rewritten
+        by a fresh owner)."""
+        key = self._page_key.pop(page, None)
+        if key is not None:
+            del self._index[key]
+
     # -- mutation ------------------------------------------------------------
 
-    def allocate(self, seq_id: int, n_tokens: int) -> list[int] | None:
+    def allocate(self, seq_id: int, n_tokens: int, *,
+                 shared_prefix=()) -> list[int] | None:
         """Reserve pages for ``n_tokens`` tokens of sequence ``seq_id``
-        (worst case up front — no mid-decode OOM, no preemption). Returns
-        the physical page list, or None when the pool can't cover it; the
-        caller keeps the request queued. A denial is counted once per
-        sequence, not once per retry — the engine re-asks every tick."""
+        (worst case up front — no mid-decode OOM, no preemption).
+
+        ``shared_prefix``: physical pages from ``match_prefix`` to map
+        into the head of the page list instead of allocating fresh —
+        each gets a refcount bump (and a cached free page is pulled back
+        out of the free list). Returns the full page list
+        ``shared + fresh`` in logical order, or None when the pool can't
+        cover the fresh remainder; the caller keeps the request queued.
+        A denial is counted once per sequence, not once per retry — the
+        engine re-asks every tick. Error paths (bad caller arguments)
+        raise before any state change; a None return changes only the
+        denial counters.
+        """
         if seq_id in self._seq_pages:
             raise KeyError(f"seq {seq_id} already allocated")
-        need = self.pages_for(n_tokens)
+        shared = [int(p) for p in shared_prefix]
+        total = planner.plan_seq_pages(n_tokens, self.page_size)
+        if len(shared) > total:
+            raise ValueError(
+                f"seq {seq_id}: shared_prefix has {len(shared)} pages but "
+                f"{n_tokens} tokens only need {total}")
+        # validate every shared page BEFORE mutating anything: a failure
+        # here must not leak pages popped for earlier entries
+        seen: set[int] = set()
+        for p in shared:
+            if not 0 <= p < self.n_pages or p in seen:
+                raise ValueError(
+                    f"seq {seq_id}: shared_prefix page {p} out of range "
+                    f"or duplicated")
+            if self._ref[p] == 0 and p not in self._page_key:
+                raise ValueError(
+                    f"seq {seq_id}: shared_prefix page {p} is neither "
+                    f"live nor prefix-indexed (stale match?)")
+            seen.add(p)
+        n_fresh = total - len(shared)
+        revive = [p for p in shared if self._ref[p] == 0]
         self.stats.alloc_calls += 1
-        if need > len(self._free):
+        # revived cached pages leave the free list too — budget both
+        if n_fresh + len(revive) > len(self._free):
             if seq_id not in self._denied:
                 self._denied.add(seq_id)
                 self.stats.admission_denials += 1
             return None
         self._denied.discard(seq_id)
-        pages = [self._free.pop() for _ in range(need)]
+        for p in revive:
+            self._free.remove(p)
+        fresh = [self._free.pop() for _ in range(n_fresh)]
+        for p in fresh:
+            self._evict(p)              # content dies with the new owner
+            self._ref[p] = 1
+        for p in shared:
+            self._ref[p] += 1
+        pages = shared + fresh
         self._seq_pages[seq_id] = pages
-        self.stats.pages_in_use += need
+        self.stats.pages_in_use += n_fresh + len(revive)
+        self.stats.prefix_pages_shared += len(shared)
         self.stats.peak_pages_in_use = max(self.stats.peak_pages_in_use,
                                            self.stats.pages_in_use)
         return pages
 
     def release(self, seq_id: int) -> int:
-        """Return a finished sequence's pages to the free list. Returns the
-        number of pages reclaimed.
+        """Drop a finished sequence's reference on each of its pages;
+        pages whose refcount hits zero return to the free list. Returns
+        the number of pages actually freed (shared pages with surviving
+        owners stay in use). Freed pages keep their prefix-index entry
+        until the free list reissues them — the cheap eviction policy that
+        lets a later request with the same prompt revive them.
 
         Raises a descriptive ``KeyError`` when ``seq_id`` has no live
         allocation — a double release or a never-admitted sequence. This
@@ -172,10 +331,15 @@ class PagePool:
                 f"(double release, or never admitted); live seqs: "
                 f"{sorted(self._seq_pages)}")
         pages = self._seq_pages.pop(seq_id)
-        self._free.extend(reversed(pages))
-        self.stats.pages_in_use -= len(pages)
+        freed = 0
+        for p in reversed(pages):       # LIFO: tail pages reissue first
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+                freed += 1
+        self.stats.pages_in_use -= freed
         self.stats.release_calls += 1
-        return len(pages)
+        return freed
 
     def block_table_row(self, seq_id: int, width: int) -> np.ndarray:
         """(width,) int32 physical-page row for the device block table.
@@ -188,3 +352,31 @@ class PagePool:
         row = np.zeros(width, np.int32)
         row[:len(pages)] = pages
         return row
+
+    # -- consistency ---------------------------------------------------------
+
+    def validate(self):
+        """Assert every internal invariant (tests call this after each
+        mutation): page conservation, refcount == number of owning
+        sequences, free list exactness, index/inverse agreement, stats
+        coherence. Raises AssertionError on the first violation."""
+        held: dict[int, int] = {}
+        for pages in self._seq_pages.values():
+            assert len(set(pages)) == len(pages), "page twice in one seq"
+            for p in pages:
+                held[p] = held.get(p, 0) + 1
+        for p in range(self.n_pages):
+            assert self._ref[p] == held.get(p, 0), \
+                f"page {p}: ref {self._ref[p]} != owners {held.get(p, 0)}"
+        assert len(self._free) == len(set(self._free)), "free-list dup"
+        assert all(self._ref[p] == 0 for p in self._free), \
+            "live page on the free list"
+        assert len(self._free) + sum(r > 0 for r in self._ref) \
+            == self.n_pages, "page conservation violated"
+        assert self.stats.pages_in_use == sum(r > 0 for r in self._ref)
+        assert 0 <= self.stats.pages_in_use <= self.stats.peak_pages_in_use
+        assert self.stats.peak_pages_in_use <= self.n_pages
+        for key, p in self._index.items():
+            assert self._page_key.get(p) == key, "index/inverse mismatch"
+        for p, key in self._page_key.items():
+            assert self._index.get(key) == p, "inverse/index mismatch"

@@ -215,6 +215,55 @@ def test_paged_vs_dense_decode_logits_agree():
         pos += 1
 
 
+def test_prefix_cache_matches_uncached_and_saves_pages():
+    """Acceptance: on a batch of requests sharing a page-aligned system
+    prompt, greedy outputs are identical with the prefix cache on vs off,
+    prefill work is actually skipped (including one COW for a bare
+    page-aligned duplicate prompt), and the peak page count is strictly
+    lower with sharing."""
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(10), cfg)
+    rng = np.random.default_rng(10)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    prompts = [sys_prompt.copy()]                     # primer
+    prompts += [np.concatenate(
+        [sys_prompt, rng.integers(0, cfg.vocab_size, n).astype(np.int32)])
+        for n in (3, 5, 1)]
+    prompts.append(sys_prompt.copy())                 # full match -> COW
+
+    def drive(on):
+        eng = ServeEngine(params, cfg, batch_slots=2, max_seq=48,
+                          quantize=None, rt=RT, kv_layout="paged",
+                          page_size=8, prefix_cache=on)
+        eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=4))
+        eng.run()                                     # prime the pool
+        for i, p in enumerate(prompts[1:], start=1):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        eng.run()
+        eng.pool.validate()
+        return {r.rid: r.output for r in eng.finished}, eng.metrics(), eng
+
+    out_off, m_off, _ = drive(False)
+    out_on, m_on, eng = drive(True)
+    assert out_on == out_off
+    assert m_off["prefill_tokens_skipped"] == 0
+    assert m_on["prefill_tokens_skipped"] > 0
+    assert m_on["prefix_hits"] == 4                   # every post-primer req
+    assert m_on["cow_copies"] == 1                    # the bare duplicate
+    assert m_on["peak_kv_pages"] < m_off["peak_kv_pages"]
+    # every page reclaimed once all owners finished
+    assert eng.pool.free_pages() == eng.pool.n_pages
+    assert eng.pool.stats.pages_in_use == 0
+
+
+def test_prefix_cache_rejected_on_dense_layout():
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(11), cfg)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServeEngine(params, cfg, batch_slots=1, max_seq=16, quantize=None,
+                    rt=RT, kv_layout="dense", prefix_cache=True)
+
+
 def test_submit_rejects_oversized_request():
     cfg = _tiny_cfg()
     params = lm_mod.lm_init(jax.random.PRNGKey(8), cfg)
