@@ -52,20 +52,22 @@ def main(argv=None):
     results = {}
     # axes: weights (dense vs sp2_4) x KV (dense slots, paged, paged +
     # SPx-quantized codes+scale pages — docs/QUANTIZATION.md) x shared
-    # prefix pages (docs/SERVING.md)
-    for scheme, layout, kvq, share in ((None, "dense", False, False),
-                                       ("sp2_4", "dense", False, False),
-                                       ("sp2_4", "paged", False, False),
-                                       ("sp2_4", "paged", True, False),
-                                       ("sp2_4", "paged", False, True)):
+    # prefix pages x prompt-lookup speculative decoding (docs/SERVING.md)
+    for scheme, layout, kvq, share, spec in (
+            (None, "dense", False, False, False),
+            ("sp2_4", "dense", False, False, False),
+            ("sp2_4", "paged", False, False, False),
+            ("sp2_4", "paged", True, False, False),
+            ("sp2_4", "paged", False, True, False),
+            ("sp2_4", "paged", False, False, True)):
         tag = (f"{scheme or 'dense'}/{layout}{'+kvq' if kvq else ''}"
-               f"{'+share' if share else ''}")
+               f"{'+share' if share else ''}{'+spec' if spec else ''}")
         ert = rt.replace(kv_quant=True, kv_scheme="spx_8_x3") if kvq else rt
-        # explicit bool (not None) so a REPRO_PREFIX_CACHE=1 environment
-        # can't silently turn sharing on for the private-page axes
+        # explicit bools (not None) so a REPRO_PREFIX_CACHE=1 /
+        # REPRO_SPEC_K environment can't silently flip the other axes
         eng = ServeEngine(params, cfg, batch_slots=4, max_seq=64,
                           quantize=scheme, rt=ert, kv_layout=layout,
-                          prefix_cache=share)
+                          prefix_cache=share, spec_decode=spec)
         t0 = time.time()
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p,
@@ -81,6 +83,9 @@ def main(argv=None):
         if share:
             extra += (f" hits {m['prefix_hits']}"
                       f" skipped {m['prefill_tokens_skipped']}tok")
+        if spec:
+            extra += (f" calls {m['model_calls']}"
+                      f" acc {m['draft_acceptance_rate']:.2f}")
         print(f"[serve_llm] {tag:12s}: {n_tok} tokens in {dt:.2f}s "
               f"({n_tok / dt:.0f} tok/s) peak KV "
               f"{m['peak_kv_bytes'] / 2**10:.0f} KiB{extra}")
@@ -103,6 +108,10 @@ def main(argv=None):
     agree_share = np.mean([
         results["sp2_4/paged"][i] == results["sp2_4/paged+share"][i]
         for i in range(args.requests)])
+    # speculative decoding vs plain decode (scheduling axis; exact)
+    agree_spec = np.mean([
+        results["sp2_4/paged"][i] == results["sp2_4/paged+spec"][i]
+        for i in range(args.requests)])
     print(f"[serve_llm] dense vs sp2_4 greedy-token agreement: {agree_q:.2f}")
     print(f"[serve_llm] dense vs paged KV exact-output agreement: "
           f"{agree_p:.2f}")
@@ -110,6 +119,8 @@ def main(argv=None):
           f"{agree_kvq:.2f}")
     print(f"[serve_llm] private vs shared prefix pages exact-output "
           f"agreement: {agree_share:.2f}")
+    print(f"[serve_llm] plain vs speculative decode exact-output "
+          f"agreement: {agree_spec:.2f}")
     return results
 
 

@@ -13,10 +13,16 @@ both compose with either KV layout — see docs/QUANTIZATION.md.
 prompts share a page-aligned prefix (a common system prompt) map the same
 physical pages instead of re-prefilling them — docs/SERVING.md.
 
+--spec-decode turns on prompt-lookup speculative decoding (paged layout):
+an n-gram drafter proposes up to --spec-k tokens per decode tick and one
+verify pass scores the whole window, so repetitive outputs cost fewer
+model calls per token — docs/SERVING.md.
+
 Env knobs that reach serving: REPRO_PAGE_SIZE (tokens per KV page),
 REPRO_PREFILL_CHUNK (chunked-prefill length), REPRO_PREFIX_CACHE=1
-(prefix cache default), REPRO_BLOCKS_* / REPRO_AUTOTUNE (kernel tiles) —
-see docs/SERVING.md.
+(prefix cache default), REPRO_SPEC_K=N (speculative decoding default +
+window), REPRO_BLOCKS_* / REPRO_AUTOTUNE (kernel tiles) — see
+docs/SERVING.md.
 """
 from __future__ import annotations
 
@@ -60,6 +66,12 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="prepend the same N-token system prompt to every "
                          "synthetic request (exercises --prefix-cache)")
+    ap.add_argument("--spec-decode", action="store_true", default=None,
+                    help="prompt-lookup speculative decoding (paged layout "
+                         "only; REPRO_SPEC_K=N sets the default)")
+    ap.add_argument("--spec-k", type=int, default=None, metavar="K",
+                    help="draft window for --spec-decode (default 4; "
+                         "passing it alone implies --spec-decode)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="quantize the KV cache to codes+scale pages")
     ap.add_argument("--kv-scheme", default="spx_8_x3",
@@ -90,7 +102,8 @@ def main(argv=None):
                       prefill_chunk=args.prefill_chunk,
                       kv_cache_dtype=(jnp.bfloat16 if args.kv_dtype == "bf16"
                                       else jnp.float32),
-                      prefix_cache=args.prefix_cache)
+                      prefix_cache=args.prefix_cache,
+                      spec_decode=args.spec_decode, spec_k=args.spec_k)
 
     rng = np.random.default_rng(args.seed)
     sys_prompt = (rng.integers(0, cfg.vocab_size, args.shared_prefix)
@@ -129,6 +142,11 @@ def main(argv=None):
             print(f"[serve] prefix cache: {m['prefix_hits']} hits, "
                   f"{m['prefill_tokens_skipped']} prefill tokens skipped, "
                   f"{m['cow_copies']} COW copies")
+        if m["spec_decode"]:
+            print(f"[serve] spec decode: K={m['spec_k']}, "
+                  f"{m['model_calls']} model calls, "
+                  f"{m['accepted_per_step']:.2f} accepted/step, "
+                  f"acceptance {m['draft_acceptance_rate']:.2f}")
     print("[serve] metrics: " + json.dumps(m, sort_keys=True))
     return done
 

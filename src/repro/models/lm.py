@@ -25,7 +25,7 @@ from repro.nn.transformer import (slot_init_cache, slot_init_paged_cache,
 
 __all__ = ["lm_init", "lm_loss", "lm_logits", "lm_prefill", "lm_decode_step",
            "init_caches", "paged_init_caches", "lm_paged_step",
-           "paged_copy_page", "chunked_ce"]
+           "lm_paged_verify", "paged_copy_page", "chunked_ce"]
 
 LOSS_CHUNK = 256
 AUX_WEIGHT = 0.01
@@ -232,4 +232,28 @@ def lm_paged_step(params, tokens, ctx_len, block_table, n_valid, caches,
     last = jnp.clip(n_valid - 1, 0, tokens.shape[1] - 1)          # (B,)
     h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
     logits = jnp.dot(h_last, _head_w(params, cfg).astype(h.dtype))
+    return logits, new_caches
+
+
+def lm_paged_verify(params, tokens, ctx_len, block_table, n_valid, caches,
+                    cfg: ArchConfig, rt: Runtime):
+    """Score a speculation window in one paged forward pass (speculative
+    decoding's verify step — serving/spec.py has the drafter).
+
+    Same contract as ``lm_paged_step`` — ``tokens`` (B, C) is each row's
+    next C tokens (here: the pending token plus up to C-1 draft tokens,
+    padded past ``n_valid``), written to the pages and attended causally
+    within the window through the chunked-prefill page-gather path — but
+    logits come back at **every** window position, (B, C, V): position j
+    is the model's distribution for the token *after* window token j,
+    which is exactly what acceptance needs to compare draft j+1 against.
+    C is the draft window (K+1, single-digit), so the (B, C, V) block
+    stays tiny. Rows with ``n_valid`` < C carry garbage logits past their
+    window — the engine only reads positions < n_valid.
+    """
+    x = embedding_apply(params["embed"], tokens)
+    h, new_caches = stack_paged(params["stack"], x, ctx_len, block_table,
+                                n_valid, cfg, rt, caches)
+    h = norm_apply(cfg.norm, params["final_norm"], h)
+    logits = jnp.dot(h, _head_w(params, cfg).astype(h.dtype))
     return logits, new_caches

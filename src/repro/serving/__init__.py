@@ -1,5 +1,6 @@
 from .engine import Request, ServeEngine
 from .kv_cache import PagePool, kv_bytes_per_token, pool_bytes
+from .spec import PromptLookupDrafter
 
 __all__ = ["Request", "ServeEngine", "PagePool", "kv_bytes_per_token",
-           "pool_bytes"]
+           "pool_bytes", "PromptLookupDrafter"]

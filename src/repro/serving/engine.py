@@ -29,6 +29,18 @@ write into a shared page). Greedy outputs are identical with sharing on
 or off (regression-tested) — sharing changes where bytes live, never
 what they hold.
 
+The paged layout also supports **speculative decoding**
+(``spec_decode=True`` / ``--spec-decode`` / ``REPRO_SPEC_K=N``): a
+model-free prompt-lookup drafter (serving/spec.py) proposes up to K
+tokens per decoding slot from the sequence's own n-gram history, one
+batched verify pass scores the whole K+1 window against the paged cache
+(``models/lm.lm_paged_verify``), and the engine keeps the longest
+accepted prefix plus one bonus/correction token — rolling the KV write
+cursor back past any rejected tail. Greedy outputs are identical with
+speculation on or off (regression-tested); what changes is model calls
+per emitted token (``metrics()["model_calls"]``,
+``accepted_per_step``, ``draft_acceptance_rate``).
+
 Either layout composes with the quantized KV cache (``rt.kv_quant`` +
 ``rt.kv_scheme`` — uniform8 baseline or non-uniform SPx): paged pools
 store uint8 codes + per-token scale and decode through the fused-dequant
@@ -37,6 +49,11 @@ actually allocated (``kv_cache_dtype``, or codes+scale when quantized).
 
 Both layouts produce identical greedy outputs (regression-tested); the
 engine exposes throughput/occupancy metrics either way via ``metrics()``.
+
+Sampling (``temperature > 0``) draws from a per-request PRNG chain
+(``Request.seed``, default derived from the engine seed and the rid), so
+a sampled request's output is a function of the request alone — not of
+submit order or which other requests share the batch.
 """
 from __future__ import annotations
 
@@ -54,6 +71,7 @@ from repro.models import lm as lm_mod
 from repro.nn.layers import quantize_params
 from repro.runtime import Runtime, planner
 from repro.serving.kv_cache import PagePool, kv_bytes_per_token
+from repro.serving.spec import DEFAULT_SPEC_K, PromptLookupDrafter
 
 __all__ = ["Request", "ServeEngine"]
 
@@ -70,12 +88,18 @@ class Request:
     prompt: np.ndarray              # (len,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    #: sampling seed (temperature > 0). None derives a key from the
+    #: engine seed and the rid, so two engines with the same seed agree;
+    #: either way every draw comes from this request's own key chain —
+    #: sampled outputs cannot depend on submit order or batch-mates.
+    seed: Optional[int] = None
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
     t_enqueue: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    key: object = dataclasses.field(default=None, repr=False)
 
 
 def _pad_pow2(n: int, cap: int) -> int:
@@ -91,7 +115,9 @@ class ServeEngine:
                  pool_pages: int | None = None,
                  prefill_chunk: int | None = None,
                  kv_cache_dtype=jnp.float32,
-                 prefix_cache: bool | None = None):
+                 prefix_cache: bool | None = None,
+                 spec_decode: bool | None = None,
+                 spec_k: int | None = None):
         self.cfg = cfg
         self.rt = rt or Runtime(impl="auto", q_chunk=256)
         self.batch_slots = batch_slots
@@ -105,7 +131,8 @@ class ServeEngine:
         if quantize:
             params = quantize_params(params, quantize)
         self.params = params
-        self._key = jax.random.PRNGKey(seed)
+        # base for per-request sampling keys (Request.seed overrides)
+        self._base_key = jax.random.PRNGKey(seed)
 
         if kv_layout == "auto":
             kv_layout = "paged" if self._pageable() else "dense"
@@ -130,6 +157,40 @@ class ServeEngine:
             prefix_cache = False
         self.prefix_cache = bool(prefix_cache)
 
+        # speculative decoding (paged only — the verify window rides the
+        # paged chunk path). None = read the env default (REPRO_SPEC_K=N
+        # enables with window N); passing spec_k alone also enables —
+        # a window size IS the intent, silently ignoring it would let a
+        # caller benchmark speculation that never ran. Mirroring
+        # prefix_cache, an env-enabled default degrades silently for a
+        # dense engine; an explicit spec_decode=True (or spec_k=) there
+        # is a caller error.
+        env_k = int(os.environ.get("REPRO_SPEC_K", "0") or 0)
+        if spec_k is not None and spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        if spec_decode is False and spec_k is not None:
+            raise ValueError(
+                f"spec_k={spec_k} with spec_decode=False — drop one")
+        explicit_spec = spec_decode is not None or spec_k is not None
+        if spec_decode is None:
+            spec_decode = env_k > 0 or spec_k is not None
+        if spec_decode and kv_layout != "paged":
+            if explicit_spec:
+                raise ValueError(
+                    "spec_decode needs kv_layout='paged' — the verify "
+                    "step scores the draft window through the paged chunk "
+                    "path")
+            spec_decode = False
+        if spec_decode:
+            self.spec_k = (spec_k if spec_k is not None
+                           else (env_k or DEFAULT_SPEC_K))
+            if self.spec_k < 1:
+                raise ValueError(
+                    f"spec_k must be >= 1, got {self.spec_k} "
+                    "(check REPRO_SPEC_K)")
+        else:
+            self.spec_k = 0
+
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int64)   # tokens in cache
         self.queue: list[Request] = []
@@ -138,6 +199,15 @@ class ServeEngine:
         self._tokens_out = 0
         self._steps = 0
         self._wall = 0.0
+        # jitted forward passes issued (prefill chunks + decode/verify
+        # steps) — the quantity speculation shrinks per emitted token
+        self._model_calls = 0
+        # speculation counters: per-row windows that carried >= 1 draft
+        # (a batched verify call holds one window per drafted slot),
+        # and drafts proposed/accepted across them
+        self._spec_windows = 0
+        self._spec_proposed = 0
+        self._spec_accepted = 0
 
         if kv_layout == "paged":
             self._init_paged(page_size, pool_pages, prefill_chunk)
@@ -198,6 +268,14 @@ class ServeEngine:
         self._paged_step = jax.jit(lm_mod.lm_paged_step,
                                    static_argnums=(6, 7),
                                    donate_argnums=(5,))
+        if self.spec_k:
+            # multi-token verify: same paged step, logits at every window
+            # position; one compile serves every tick (fixed K+1 window,
+            # ragged rows ride on n_valid like prefill chunks do)
+            self._paged_verify = jax.jit(lm_mod.lm_paged_verify,
+                                         static_argnums=(6, 7),
+                                         donate_argnums=(5,))
+            self.drafter = PromptLookupDrafter()
         # copy-on-write page duplication; src/dst ride as traced scalars
         # so the one compile covers every page pair
         self._copy_page = jax.jit(lm_mod.paged_copy_page,
@@ -252,6 +330,12 @@ class ServeEngine:
                 raise ValueError(
                     f"request {req.rid}: needs {need} pages but the pool "
                     f"only has {self.pool.n_pages} in total")
+        if req.key is None:
+            # per-request chain: explicit seed wins; otherwise derive from
+            # the engine seed + rid (stable across batch compositions)
+            req.key = (jax.random.PRNGKey(req.seed)
+                       if req.seed is not None
+                       else jax.random.fold_in(self._base_key, req.rid))
         req.t_enqueue = time.time()
         self.queue.append(req)
 
@@ -285,6 +369,10 @@ class ServeEngine:
         self._tokens_out = 0
         self._steps = 0
         self._wall = 0.0
+        self._model_calls = 0
+        self._spec_windows = 0
+        self._spec_proposed = 0
+        self._spec_accepted = 0
         if self.kv_layout == "paged":
             self.pool.stats.peak_pages_in_use = self.pool.stats.pages_in_use
             self.pool.stats.admission_denials = 0
@@ -313,7 +401,18 @@ class ServeEngine:
                      "prefix_cache": self.prefix_cache,
                      "prefix_hits": self._prefix_hits,
                      "prefill_tokens_skipped": self._prefill_skipped,
-                     "cow_copies": self._cow_copies}
+                     "cow_copies": self._cow_copies,
+                     "spec_decode": bool(self.spec_k),
+                     "spec_k": self.spec_k,
+                     # drafts accepted per drafted window (one window =
+                     # one slot that proposed >= 1 draft this tick) /
+                     # per proposed draft token — 0.0 until one ran
+                     "accepted_per_step":
+                         self._spec_accepted / self._spec_windows
+                         if self._spec_windows else 0.0,
+                     "draft_acceptance_rate":
+                         self._spec_accepted / self._spec_proposed
+                         if self._spec_proposed else 0.0}
         else:
             peak_kv = self.batch_slots * self.max_seq * per_tok
             paged = {}
@@ -327,6 +426,7 @@ class ServeEngine:
             "requests_finished": len(self.finished),
             "tokens_generated": self._tokens_out,
             "engine_steps": self._steps,
+            "model_calls": self._model_calls,
             "wall_s": self._wall,
             "tokens_per_s": self._tokens_out / self._wall
             if self._wall else 0.0,
@@ -408,6 +508,11 @@ class ServeEngine:
             self._fed[slot] = matched
             self.block_tables[slot] = self.pool.block_table_row(
                 req.rid, self.pages_per_seq)
+            if self.spec_k:
+                # the drafter indexes the FULL prompt (matched prefix
+                # included) — sharing changes where KV bytes live, not
+                # what n-grams the sequence's history contains
+                self.drafter.start(req.rid, req.prompt)
 
     def _prefill_tick(self):
         """Advance every prefilling slot by one prompt chunk in a single
@@ -435,6 +540,7 @@ class ServeEngine:
             self.params, jnp.asarray(tokens), jnp.asarray(ctx),
             jnp.asarray(self.block_tables), jnp.asarray(n_valid),
             self.caches, self.cfg, self.rt)
+        self._model_calls += 1
         logits = np.asarray(logits)
         for i in rows:
             req = self.slot_req[i]
@@ -454,6 +560,8 @@ class ServeEngine:
                 first = self._pick_token(logits[i], req)
                 req.output.append(int(first))
                 self._tokens_out += 1
+                if self.spec_k:
+                    self.drafter.extend(req.rid, int(first))
                 req.t_first_token = time.time()
                 self._maybe_finish(i)       # max_new_tokens == 1
 
@@ -462,6 +570,20 @@ class ServeEngine:
                   if r is not None and self._fed[i] < 0]
         if not active:
             return
+        if self.spec_k:
+            drafts = {}
+            for i in active:
+                req = self.slot_req[i]
+                room = self._draft_room(req, int(self.slot_pos[i]))
+                drafts[i] = (self.drafter.propose(req.rid,
+                                                  min(self.spec_k, room))
+                             if room > 0 else [])
+            if any(drafts.values()):
+                self._verify_step(active, drafts)
+                return
+            # every tail was novel: degrade to the plain one-token step
+            # below (the C==1 decode kernel) instead of paying the K+1
+            # verify window for zero drafts
         tokens = np.zeros((self.batch_slots, 1), np.int32)
         n_valid = np.zeros(self.batch_slots, np.int32)
         ctx = np.zeros(self.batch_slots, np.int32)
@@ -473,14 +595,117 @@ class ServeEngine:
             self.params, jnp.asarray(tokens), jnp.asarray(ctx),
             jnp.asarray(self.block_tables), jnp.asarray(n_valid),
             self.caches, self.cfg, self.rt)
+        self._model_calls += 1
         logits = np.asarray(logits)
         for i in active:
             req = self.slot_req[i]
             tok = self._pick_token(logits[i], req)
             req.output.append(int(tok))
+            if self.spec_k:
+                # keep the n-gram history == prompt + output even on
+                # degraded (no-draft) ticks, or later proposals would
+                # continue from a stale tail
+                self.drafter.extend(req.rid, int(tok))
             self._tokens_out += 1
             self.slot_pos[i] += 1
             self._maybe_finish(i)
+
+    # -- speculative decoding (serving/spec.py has the drafter) --------------
+
+    def _draft_room(self, req: Request, pos: int) -> int:
+        """Max draft tokens this window may carry. Two caps: the window
+        emits up to d+1 tokens (never past max_new_tokens) and writes
+        positions pos..pos+d (never past the positions a non-speculative
+        decode could reach, so the worst-case page reservation still
+        covers every write)."""
+        return min(req.max_new_tokens - len(req.output),
+                   self.max_seq - 1 - pos) - 1
+
+    def _verify_step(self, active, drafts: dict[int, list[int]]):
+        """Draft-and-verify decode tick: at least one decoding slot has
+        ``drafts`` (rows with none ride along as 1-valid plain decodes),
+        one batched ``lm_paged_verify`` scores all windows, and each row
+        keeps its longest accepted prefix plus a bonus or correction
+        token. Rollback is cursor arithmetic: ``slot_pos`` advances only
+        past accepted tokens; the rejected tail's page slots are
+        overwritten by the next window at those positions and are never
+        attended (``attend_len`` masks them)."""
+        w = self.spec_k + 1
+        tokens = np.zeros((self.batch_slots, w), np.int32)
+        n_valid = np.zeros(self.batch_slots, np.int32)
+        ctx = np.zeros(self.batch_slots, np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            d = drafts[i]
+            tokens[i, 0] = req.output[-1]
+            if d:
+                tokens[i, 1:1 + len(d)] = d
+            n_valid[i] = 1 + len(d)
+            ctx[i] = self.slot_pos[i]
+        logits, self.caches = self._paged_verify(
+            self.params, jnp.asarray(tokens), jnp.asarray(ctx),
+            jnp.asarray(self.block_tables), jnp.asarray(n_valid),
+            self.caches, self.cfg, self.rt)
+        self._model_calls += 1
+        logits = np.asarray(logits)                  # (B, W, V)
+        for i in active:
+            req = self.slot_req[i]
+            emitted = self._accept_tokens(req, drafts[i], logits[i])
+            accepted = len(emitted) - 1              # drafts kept
+            for tok in emitted:
+                req.output.append(int(tok))
+                self.drafter.extend(req.rid, int(tok))
+            self._tokens_out += len(emitted)
+            if drafts[i]:
+                self._spec_windows += 1
+            self._spec_proposed += len(drafts[i])
+            self._spec_accepted += accepted
+            # KV rollback: pending token + accepted drafts stay; the
+            # write cursor retreats past the rejected tail
+            self.slot_pos[i] = int(ctx[i]) + 1 + accepted
+            self._maybe_finish(i)
+
+    def _accept_tokens(self, req: Request, drafts: list[int],
+                       logits: np.ndarray) -> list[int]:
+        """Tokens to emit for one verified window. ``logits``: (W, V),
+        position j scored after window token j. Greedy: longest prefix of
+        drafts matching argmax, then the correction (first mismatch) or
+        bonus (all matched) token — by construction exactly the sequence
+        non-speculative greedy decode would emit. Temperature: per-draft
+        rejection sampling against the target distribution; the drafter
+        is deterministic (a point mass), so acceptance of draft t is a
+        Bernoulli(p[t]) draw and a rejection resamples from the residual
+        p with t removed — the emitted token is still distributed per
+        the target model. All draws come from the request's own key
+        chain."""
+        if req.temperature <= 0:
+            out = []
+            for j, t in enumerate(drafts):
+                top = int(np.argmax(logits[j]))
+                if top != t:
+                    return out + [top]               # correction
+                out.append(t)
+            out.append(int(np.argmax(logits[len(drafts)])))  # bonus
+            return out
+        out = []
+        for j, t in enumerate(drafts):
+            p = _softmax_np(logits[j], req.temperature)
+            req.key, sub = jax.random.split(req.key)
+            if float(jax.random.uniform(sub)) < p[t]:
+                out.append(t)
+                continue
+            # rejected: resample from the residual (p minus the point
+            # mass at t, renormalized)
+            res = p.copy()
+            res[t] = 0.0
+            z = res.sum()
+            req.key, sub = jax.random.split(req.key)
+            if z <= 0.0:                             # p was ~all at t
+                return out + [int(np.argmax(logits[j]))]
+            return out + [int(jax.random.choice(sub, res.shape[0],
+                                                p=jnp.asarray(res / z)))]
+        out.append(self._pick_token(logits[len(drafts)], req))  # bonus
+        return out
 
     def _maybe_finish(self, slot: int):
         req = self.slot_req[slot]
@@ -499,6 +724,8 @@ class ServeEngine:
             self.block_tables[slot] = 0
             self._fed[slot] = -1
             self._prompt_keys.pop(req.rid, None)
+            if self.spec_k:
+                self.drafter.drop(req.rid)
 
     # -- dense internals -----------------------------------------------------
 
@@ -516,6 +743,7 @@ class ServeEngine:
                 logits, row_caches = self._prefill_one(self.params, tok,
                                                        row_caches, self.cfg,
                                                        self.rt)
+                self._model_calls += 1
                 self.caches = _splice_caches(self.caches, row_caches, slot)
                 self.slot_pos[slot] = len(req.prompt)
                 first = self._pick_token(logits[0], req)
@@ -537,6 +765,7 @@ class ServeEngine:
                                            jnp.asarray(tokens),
                                            pos, self.caches, self.cfg,
                                            self.rt)
+        self._model_calls += 1
         logits = np.asarray(logits)
         for i in active:
             req = self.slot_req[i]
@@ -551,9 +780,21 @@ class ServeEngine:
     def _pick_token(self, row: np.ndarray, req: Request) -> int:
         if req.temperature <= 0:
             return int(np.argmax(row))
-        self._key, sub = jax.random.split(self._key)
+        # per-request chain: the draw sequence is a function of this
+        # request alone, so sampled outputs are invariant to submit
+        # order, slot assignment and batch-mates (regression-tested)
+        req.key, sub = jax.random.split(req.key)
         return int(jax.random.categorical(sub, jnp.asarray(row)
                                           / req.temperature))
+
+
+def _softmax_np(row: np.ndarray, temperature: float) -> np.ndarray:
+    """Stable softmax over a logits row (f64 — host-side acceptance
+    probabilities for speculative rejection sampling)."""
+    x = np.asarray(row, np.float64) / temperature
+    x = x - x.max()
+    p = np.exp(x)
+    return p / p.sum()
 
 
 def _splice_caches(batch_caches, row_caches, slot: int):

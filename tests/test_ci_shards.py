@@ -1,0 +1,88 @@
+"""tools/ci_shards.py is the single source of truth for the tier-1 CI
+shards: the map must be disjoint and exhaustive over tests/test_*.py, a
+deliberately omitted file must fail --check (that is the whole point —
+a new test file can't silently drop out of CI), and the workflow must
+actually consume its ignore lists."""
+import os
+import subprocess
+import sys
+
+_TOOLS = os.path.normpath(os.path.join(os.path.dirname(__file__), "..",
+                                       "tools"))
+sys.path.insert(0, _TOOLS)
+
+import ci_shards  # noqa: E402
+
+
+def test_real_map_is_disjoint_and_exhaustive():
+    assert ci_shards.check() == []
+
+
+def test_every_shard_ignores_exactly_the_other_shards():
+    all_files = {f for files in ci_shards.SHARDS.values() for f in files}
+    for shard, files in ci_shards.SHARDS.items():
+        ignored = {a.removeprefix("--ignore=")
+                   for a in ci_shards.ignore_args(shard)}
+        assert ignored == all_files - set(files), shard
+        assert not ignored & set(files), shard    # never ignores its own
+
+
+def test_omitted_file_fails_check():
+    # drop one file from every shard: --check must name it
+    broken = {name: [f for f in files if f != "tests/test_serving.py"]
+              for name, files in ci_shards.SHARDS.items()}
+    failures = ci_shards.check(shards=broken)
+    assert any("tests/test_serving.py" in m and "not assigned" in m
+               for m in failures), failures
+
+
+def test_double_assignment_and_stale_entry_fail_check():
+    dup = {"a": ["tests/test_serving.py"], "b": ["tests/test_serving.py"]}
+    assert any("disjoint" in m
+               for m in ci_shards.check(
+                   shards=dup, test_files=["tests/test_serving.py"]))
+    stale = {"a": ["tests/test_serving.py", "tests/test_gone.py"]}
+    assert any("not on disk" in m
+               for m in ci_shards.check(
+                   shards=stale, test_files=["tests/test_serving.py"]))
+
+
+def test_unknown_shard_raises():
+    try:
+        ci_shards.ignore_args("no-such-shard")
+    except KeyError as e:
+        assert "no-such-shard" in str(e)
+    else:
+        raise AssertionError("expected KeyError")
+
+
+def test_cli_check_and_ignore_args():
+    script = os.path.join(_TOOLS, "ci_shards.py")
+    ok = subprocess.run([sys.executable, script, "--check"],
+                       capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    out = subprocess.run([sys.executable, script, "--ignore-args", "core"],
+                         capture_output=True, text=True)
+    assert out.returncode == 0
+    args = out.stdout.split()
+    assert args and all(a.startswith("--ignore=tests/test_") for a in args)
+    bad = subprocess.run([sys.executable, script, "--ignore-args", "nope"],
+                         capture_output=True, text=True)
+    assert bad.returncode == 1
+
+
+def test_workflow_consumes_the_shard_map():
+    """ci.yml must build its pytest args from ci_shards.py (no more
+    hand-duplicated ignore lists) and run --check in the checks job; the
+    matrix must name exactly the shards the map defines."""
+    wf = open(os.path.join(ci_shards.REPO, ".github", "workflows",
+                           "ci.yml")).read()
+    assert "ci_shards.py --check" in wf
+    assert "ci_shards.py --ignore-args" in wf
+    assert "--ignore=tests/" not in wf      # the old hand-written lists
+    matrix = [ln for ln in wf.splitlines()
+              if ln.strip().startswith("shard: [")]
+    assert len(matrix) == 1
+    names = {s.strip() for s in
+             matrix[0].split("[", 1)[1].rstrip(" ]").split(",")}
+    assert names == set(ci_shards.SHARDS)

@@ -1,0 +1,346 @@
+"""Prompt-lookup speculative decoding (serving/spec.py + the engine's
+draft-and-verify loop, docs/SERVING.md):
+
+* the non-negotiable invariant — greedy outputs with speculation ON are
+  identical to speculation OFF on the pinned vocab=32/dh=128/seed-3
+  workload, across paged and paged+kv_quant, prefix cache on and off —
+  and this holds for ANY drafter (stubs proposing garbage included:
+  verification makes draft quality a throughput knob, never a
+  correctness one),
+* accept/rollback edges: rejection at position 0, full-window acceptance
+  (oracle drafter), rollback across a page boundary, max_new_tokens
+  truncation (never emits past the cap),
+* per-request seeded sampling: temperature>0 outputs are invariant to
+  batch composition and pinned by Request.seed,
+* knobs: REPRO_SPEC_K enables with that window, dense engines reject an
+  explicit spec_decode=True and silently drop an env-enabled one.
+
+No hypothesis dependency — collected on the bare tier-1 environment.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import lm as lm_mod
+from repro.runtime import Runtime
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.spec import PromptLookupDrafter
+
+jax.config.update("jax_platform_name", "cpu")
+
+RT = Runtime(impl="ref", q_chunk=16)
+
+
+def _serving_cfg():
+    # the pinned exact-greedy workload (see tests/test_kv_quant.py):
+    # vocab=32 keeps random-init top-2 logit gaps wide, so the equality
+    # assertions compare decode paths instead of coin-flip near-ties
+    return dataclasses.replace(reduced(get_config("gemma-2b"), vocab=32),
+                               head_dim=128)
+
+
+def _params(cfg):
+    return lm_mod.lm_init(jax.random.PRNGKey(3), cfg)
+
+
+def _prompts(cfg, n=4, reps=3):
+    # repetition-heavy (tiled motifs): the n-gram drafter has something
+    # to find, so the acceptance counters are exercised, not just defined
+    rng = np.random.default_rng(3)
+    return [np.tile(rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                    reps) for _ in range(n)]
+
+
+def _drive(params, cfg, prompts, *, spec, new_tokens=8, drafter=None,
+           rt=RT, **kw):
+    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64,
+                      quantize=None, rt=rt, kv_layout="paged",
+                      spec_decode=spec, **kw)
+    if drafter is not None:
+        eng.drafter = drafter
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=new_tokens))
+    out = {r.rid: r.output for r in eng.run()}
+    return out, eng.metrics()
+
+
+# ---------------------------------------------------------------------------
+# Drafter unit behavior (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def test_drafter_proposes_latest_continuation():
+    d = PromptLookupDrafter(ngram_max=3, ngram_min=1)
+    d.start(0, [1, 2, 3, 9, 1, 2, 3, 7, 1, 2, 3])
+    # tail (1,2,3) last occurred (interior) at 4..6, continuation 7...
+    assert d.propose(0, 4) == [7, 1, 2, 3]
+    assert d.propose(0, 1) == [7]                  # k caps the proposal
+    d.extend(0, 9)
+    # tail ...3,9 matches positions 2..3, continuation 1,2 ...
+    assert d.propose(0, 2) == [1, 2]
+    assert d.propose(0, 0) == []
+
+
+def test_drafter_novel_tail_proposes_nothing():
+    d = PromptLookupDrafter()
+    d.start(0, [5, 6, 7, 8])                       # no repetition at all
+    assert d.propose(0, 4) == []
+    d.extend(0, 5)
+    # tail 1-gram 5 occurred at 0, continuation 6: proposals resume
+    assert d.propose(0, 2) == [6, 7]
+
+
+def test_drafter_lifecycle_errors():
+    d = PromptLookupDrafter()
+    d.start(0, [1, 1])
+    with pytest.raises(KeyError):
+        d.start(0, [2])
+    d.drop(0)
+    d.drop(0)                                      # idempotent
+    with pytest.raises(KeyError):
+        d.propose(0, 2)
+    with pytest.raises(ValueError):
+        PromptLookupDrafter(ngram_max=0)
+
+
+# ---------------------------------------------------------------------------
+# The invariant: spec-on greedy == spec-off, every cache configuration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_quant,prefix", [(False, False), (False, True),
+                                             (True, False), (True, True)])
+def test_spec_greedy_matches_nonspec_pinned(kv_quant, prefix):
+    cfg = _serving_cfg()
+    params = _params(cfg)
+    prompts = _prompts(cfg)
+    rt = RT.replace(kv_quant=True, kv_scheme="spx_8_x3") if kv_quant else RT
+    kw = dict(rt=rt, page_size=8, prefix_cache=prefix)
+    off, m_off = _drive(params, cfg, prompts, spec=False, **kw)
+    on, m_on = _drive(params, cfg, prompts, spec=True, spec_k=4, **kw)
+    assert on == off
+    # repetition-heavy workload: speculation must actually pay
+    assert m_on["model_calls"] < m_off["model_calls"]
+    assert m_on["draft_acceptance_rate"] > 0
+    assert m_on["spec_decode"] and m_on["spec_k"] == 4
+    assert not m_off["spec_decode"]
+    assert m_on["tokens_generated"] == m_off["tokens_generated"]
+
+
+# ---------------------------------------------------------------------------
+# Accept/rollback edges via stub drafters (correctness is drafter-free)
+# ---------------------------------------------------------------------------
+
+class _StubDrafter:
+    """Engine-facing drafter driven by fn(rid, n_emitted, k) -> tokens."""
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.emitted: dict[int, int] = {}
+
+    def start(self, rid, prompt):
+        self.emitted[rid] = 0
+
+    def extend(self, rid, tok):
+        self.emitted[rid] += 1
+
+    def drop(self, rid):
+        self.emitted.pop(rid, None)
+
+    def propose(self, rid, k):
+        return list(self.fn(rid, self.emitted[rid], k))[:k]
+
+
+def test_rejection_at_position_zero_yields_correction():
+    """A drafter that is always wrong at position 0: zero drafts survive,
+    every emitted token is the verify correction — outputs must still
+    equal non-speculative greedy exactly."""
+    cfg = _serving_cfg()
+    params = _params(cfg)
+    prompts = _prompts(cfg, n=2)
+    off, m_off = _drive(params, cfg, prompts, spec=False)
+    wrong = _StubDrafter(
+        lambda rid, n, k: [(off[rid][n] + 1) % cfg.vocab_size] * k)
+    on, m = _drive(params, cfg, prompts, spec=True, spec_k=4,
+                   drafter=wrong)
+    assert on == off
+    assert m["draft_acceptance_rate"] == 0.0
+    assert m["accepted_per_step"] == 0.0
+    # no acceptance -> one emitted token per verify window, same call
+    # count as plain decode
+    assert m["model_calls"] == m_off["model_calls"]
+
+
+def test_oracle_drafter_full_window_acceptance():
+    """A drafter that proposes the exact future output: every window is
+    fully accepted, acceptance rate is 1.0, and the engine strictly
+    beats one-call-per-token."""
+    cfg = _serving_cfg()
+    params = _params(cfg)
+    prompts = _prompts(cfg, n=2)
+    off, m_off = _drive(params, cfg, prompts, spec=False, new_tokens=9)
+    oracle = _StubDrafter(lambda rid, n, k: off[rid][n:n + k])
+    on, m = _drive(params, cfg, prompts, spec=True, spec_k=4,
+                   drafter=oracle, new_tokens=9)
+    assert on == off
+    assert m["draft_acceptance_rate"] == 1.0
+    assert m["model_calls"] < m_off["model_calls"]
+    # 8 post-first tokens per request at K=4: each window emits K+1=5
+    # then the final 3 (draft room shrinks near the cap) -> 2 windows,
+    # lockstep across the two slots
+    assert m["engine_steps"] < m_off["engine_steps"]
+
+
+def test_rollback_across_page_boundary():
+    """Acceptance stops mid-window with the rejected tail already written
+    across a page boundary; the cursor rolls back over the boundary and
+    later windows overwrite the stale slots. Outputs must be exact."""
+    cfg = _serving_cfg()
+    params = _params(cfg)
+    prompts = [np.tile(np.arange(3, dtype=np.int32) % cfg.vocab_size, 2)]
+    off, _ = _drive(params, cfg, prompts, spec=False, new_tokens=12,
+                    page_size=4)
+    # prompt len 6, page_size 4: first verify window writes positions
+    # 6..11 -> pages 1 and 2; accept exactly one draft (corrupt index 1),
+    # so slot_pos rolls back to 8 = the page-2 boundary itself
+    def corrupt_at_1(rid, n, k):
+        toks = list(off[rid][n:n + k])
+        if len(toks) > 1:
+            toks[1] = (toks[1] + 1) % cfg.vocab_size
+        return toks
+    on, m = _drive(params, cfg, prompts, spec=True, spec_k=5,
+                   drafter=_StubDrafter(corrupt_at_1), new_tokens=12,
+                   page_size=4)
+    assert on == off
+    assert 0 < m["draft_acceptance_rate"] < 1.0
+
+
+def test_spec_never_emits_past_max_new_tokens():
+    """Draft room shrinks to the emission cap: a huge K with a tiny
+    max_new_tokens emits exactly max_new_tokens, and the windows never
+    write past the worst-case page reservation."""
+    cfg = _serving_cfg()
+    params = _params(cfg)
+    prompts = _prompts(cfg, n=2)
+    for new_tokens in (1, 2, 3):
+        off, _ = _drive(params, cfg, prompts, spec=False,
+                        new_tokens=new_tokens)
+        on, _ = _drive(params, cfg, prompts, spec=True, spec_k=8,
+                       new_tokens=new_tokens)
+        assert on == off
+        for out in on.values():
+            assert len(out) == new_tokens
+
+
+# ---------------------------------------------------------------------------
+# Per-request seeded sampling (batch-composition invariance)
+# ---------------------------------------------------------------------------
+
+def _sampled(params, cfg, batch, *, engine_seed=0, slots=3):
+    eng = ServeEngine(params, cfg, batch_slots=slots, max_seq=64,
+                      quantize=None, rt=RT, kv_layout="paged",
+                      seed=engine_seed)
+    for rid, prompt, seed in batch:
+        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=6,
+                           temperature=0.8, seed=seed))
+    return {r.rid: r.output for r in eng.run()}
+
+
+def test_sampled_output_invariant_to_batch_composition():
+    cfg = _serving_cfg()
+    params = _params(cfg)
+    ps = _prompts(cfg, n=3)
+    solo = _sampled(params, cfg, [(0, ps[0], None)])
+    crowd = _sampled(params, cfg, [(7, ps[1], None), (0, ps[0], None),
+                                   (9, ps[2], None)])
+    # same rid + engine seed -> same key chain, whoever shares the batch
+    assert solo[0] == crowd[0]
+    # an explicit Request.seed pins the output across ENGINE seeds too
+    a = _sampled(params, cfg, [(0, ps[0], 123)], engine_seed=1)
+    b = _sampled(params, cfg, [(0, ps[0], 123)], engine_seed=2)
+    assert a[0] == b[0]
+    # ... and different rids with no explicit seed draw different chains
+    c = _sampled(params, cfg, [(0, ps[0], None), (1, ps[0], None)])
+    assert c[0] != c[1]
+
+
+def test_spec_sampled_is_deterministic():
+    """temperature>0 under speculation: rejection sampling draws from the
+    per-request chain, so a rerun of the same engine config reproduces
+    the outputs token-for-token."""
+    cfg = _serving_cfg()
+    params = _params(cfg)
+    ps = _prompts(cfg, n=2)
+
+    def run():
+        eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64,
+                          quantize=None, rt=RT, kv_layout="paged",
+                          spec_decode=True, spec_k=4, seed=5)
+        for i, p in enumerate(ps):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=8,
+                               temperature=0.8))
+        return {r.rid: r.output for r in eng.run()}
+
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# Knobs
+# ---------------------------------------------------------------------------
+
+def test_spec_knobs(monkeypatch):
+    cfg = _serving_cfg()
+    params = _params(cfg)
+    monkeypatch.setenv("REPRO_SPEC_K", "3")
+    eng = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                      quantize=None, rt=RT, kv_layout="paged")
+    assert eng.spec_k == 3                        # env enables + sizes
+    # env-enabled speculation degrades silently for a dense engine...
+    dense = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                        quantize=None, rt=RT, kv_layout="dense")
+    assert dense.spec_k == 0
+    monkeypatch.delenv("REPRO_SPEC_K")
+    off = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                      quantize=None, rt=RT, kv_layout="paged")
+    assert off.spec_k == 0
+    # ... but an explicit spec_decode=True there is a caller error
+    with pytest.raises(ValueError, match="spec_decode"):
+        ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                    quantize=None, rt=RT, kv_layout="dense",
+                    spec_decode=True)
+    # an explicit zero/negative window is an error, not a silent default
+    for bad_k in (0, -1):
+        with pytest.raises(ValueError, match="spec_k"):
+            ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                        quantize=None, rt=RT, kv_layout="paged",
+                        spec_decode=True, spec_k=bad_k)
+    # spec_k alone implies spec_decode (a window size IS the intent —
+    # silently ignoring it would benchmark speculation that never ran)
+    implied = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                          quantize=None, rt=RT, kv_layout="paged",
+                          spec_k=2)
+    assert implied.spec_k == 2
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                    quantize=None, rt=RT, kv_layout="paged",
+                    spec_decode=False, spec_k=2)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(params, cfg, batch_slots=1, max_seq=32,
+                    quantize=None, rt=RT, kv_layout="dense", spec_k=2)
+
+
+def test_all_novel_tick_degrades_to_plain_decode():
+    """A drafter that never proposes: the engine must fall back to the
+    one-token decode step (no verify windows at all), with outputs equal
+    to spec-off and the same model-call count."""
+    cfg = _serving_cfg()
+    params = _params(cfg)
+    prompts = _prompts(cfg, n=2)
+    off, m_off = _drive(params, cfg, prompts, spec=False)
+    on, m = _drive(params, cfg, prompts, spec=True, spec_k=4,
+                   drafter=_StubDrafter(lambda rid, n, k: []))
+    assert on == off
+    assert m["model_calls"] == m_off["model_calls"]
+    assert m["accepted_per_step"] == 0.0
+    assert m["draft_acceptance_rate"] == 0.0
