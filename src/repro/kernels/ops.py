@@ -12,6 +12,7 @@ one-size-fits-all tiles and per-callsite string matching.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import time
 
@@ -25,15 +26,38 @@ from repro.runtime import planner, registry
 from . import ref as ref_impl
 from .flash_attention import flash_attention_pallas
 from .paged_attention import (paged_attention_pallas,
-                              paged_attention_quant_pallas)
+                              paged_attention_quant_pallas,
+                              paged_decode_ragged_pallas,
+                              paged_decode_ragged_quant_pallas)
 from .spx_matmul import spx_matmul_pallas
 
 __all__ = ["spx_matmul", "flash_attention", "paged_attention",
-           "paged_attention_quant", "resolve_impl"]
+           "paged_attention_quant", "paged_decode_ragged", "resolve_impl",
+           "op_calls", "reset_op_calls"]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Trace-time launch accounting: each public wrapper bumps its op counter on
+# every call. Under jit the wrapper body runs at TRACE time only, so after a
+# steady-state run the counter reads *kernel launches per compiled step* —
+# the megakernel tests assert exactly one paged_decode_ragged per decode
+# trace and zero legacy paged_attention* calls.
+# ---------------------------------------------------------------------------
+
+_OP_CALLS: collections.Counter = collections.Counter()
+
+
+def op_calls() -> dict[str, int]:
+    """Wrapper-call counts per op since the last ``reset_op_calls()``."""
+    return dict(_OP_CALLS)
+
+
+def reset_op_calls() -> None:
+    _OP_CALLS.clear()
 
 
 def resolve_impl(impl: str) -> str:
@@ -81,6 +105,7 @@ registry.register("spx_matmul", "interpret",
 def spx_matmul(x: jax.Array, qt: QuantizedTensor, *, impl: str = "auto",
                out_dtype=None) -> jax.Array:
     """x: (..., K) @ dequant(qt: (K, N)) -> (..., N)."""
+    _OP_CALLS["spx_matmul"] += 1
     entry = registry.resolve("spx_matmul", impl)
     k_dim, n_dim = qt.logical_shape
     scale = qt.scale.reshape(1, n_dim).astype(jnp.float32)
@@ -175,6 +200,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, impl: str = "auto") -> jax.Array:
     """GQA attention. q: (B, Hq, Sq, dh); k, v: (B, Hkv, Skv, dh);
     Hq % Hkv == 0. Returns (B, Hq, Sq, dh)."""
+    _OP_CALLS["flash_attention"] += 1
     b, hq, sq, dh = q.shape
     _, hkv, skv, _ = k.shape
     assert hq % hkv == 0, (hq, hkv)
@@ -233,6 +259,7 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     Returns (B, Hq, dh). Page geometry is chosen at pool-allocation time
     via planner.plan_kv_pages, not per call.
     """
+    _OP_CALLS["paged_attention"] += 1
     b, hq, dh = q.shape
     hkv = k_pages.shape[1]
     assert hq % hkv == 0, (hq, hkv)
@@ -284,6 +311,7 @@ def paged_attention_quant(q: jax.Array, k_pages: dict, v_pages: dict,
     core/spx level set the codes were quantized under (static — resolves
     to a <=256-entry f32 codebook). Returns (B, Hq, dh).
     """
+    _OP_CALLS["paged_attention_quant"] += 1
     b, hq, dh = q.shape
     hkv = k_pages["codes"].shape[1]
     assert hq % hkv == 0, (hq, hkv)
@@ -295,3 +323,129 @@ def paged_attention_quant(q: jax.Array, k_pages: dict, v_pages: dict,
                    jnp.asarray(block_table, jnp.int32),
                    jnp.asarray(ctx_len, jnp.int32), lut)
     return out.reshape(b, hq, dh)
+
+
+# ---------------------------------------------------------------------------
+# paged_decode_ragged: the decode megakernel — one launch covers the whole
+# batched decode tick, plain decode AND the spec-decode verify window, over
+# a ragged (slot, attend_len) grid, for dense or quantized (fused-LUT) KV
+# pools. Registered impls share the signatures
+#   dense: fn(q4, k_pages, v_pages, block_table, ctx_len, q_len, *, w)
+#   quant: fn(q4, k_codes, k_scale, v_codes, v_scale, block_table, ctx_len,
+#             q_len, lut, *, w)
+# with q4: (B, Hkv, rep * w, dh) rep-major window rows.
+# ---------------------------------------------------------------------------
+
+@registry.register("paged_decode_ragged", "ref",
+                   priority=registry.PRIORITY_REFERENCE)
+def _paged_decode_ragged_ref(q4, k_pages, v_pages, block_table, ctx_len,
+                             q_len, *, w):
+    return ref_impl.paged_decode_ragged_ref(q4, k_pages, v_pages,
+                                            block_table, ctx_len, q_len,
+                                            w=w)
+
+
+registry.register("paged_decode_ragged", "pallas",
+                  priority=registry.PRIORITY_ACCELERATOR,
+                  available=_on_tpu)(
+    functools.partial(paged_decode_ragged_pallas, interpret=False))
+registry.register("paged_decode_ragged", "interpret",
+                  priority=registry.PRIORITY_DEBUG)(
+    functools.partial(paged_decode_ragged_pallas, interpret=True))
+
+
+@registry.register("paged_decode_ragged_quant", "ref",
+                   priority=registry.PRIORITY_REFERENCE)
+def _paged_decode_ragged_quant_ref(q4, k_codes, k_scale, v_codes, v_scale,
+                                   block_table, ctx_len, q_len, lut, *, w):
+    return ref_impl.paged_decode_ragged_quant_ref(
+        q4, k_codes, k_scale, v_codes, v_scale, block_table, ctx_len,
+        q_len, lut, w=w)
+
+
+registry.register("paged_decode_ragged_quant", "pallas",
+                  priority=registry.PRIORITY_ACCELERATOR,
+                  available=_on_tpu)(
+    functools.partial(paged_decode_ragged_quant_pallas, interpret=False))
+registry.register("paged_decode_ragged_quant", "interpret",
+                  priority=registry.PRIORITY_DEBUG)(
+    functools.partial(paged_decode_ragged_quant_pallas, interpret=True))
+
+
+def paged_decode_ragged(q: jax.Array, k_pages, v_pages,
+                        block_table: jax.Array, ctx_len: jax.Array,
+                        q_len: jax.Array, *, kv_scheme: str | None = None,
+                        impl: str = "auto") -> jax.Array:
+    """Ragged decode-window attention in ONE kernel launch per tick.
+
+    q: (B, W, Hq, dh) — W window positions per slot (spec K+1, or 1 for
+    plain decode; static). q_len: (B,) int32 valid window rows per slot —
+    the ragged part; rows at positions >= q_len return exact zeros.
+    ctx_len: (B,) int32 tokens already in the pages before this window
+    (window position i of slot b attends cache positions <= ctx_len[b] +
+    i; ctx_len = q_len = 0 marks an inactive slot, which skips every
+    page). k_pages/v_pages: either the dense (n_pages, Hkv, page_size,
+    dh) pools or the quantized {"codes", "scale"} dicts from
+    ``nn.attention.paged_kv_write`` — a dict pool routes to the fused-LUT
+    variant, with ``kv_scheme`` naming the codebook (required then).
+    Returns (B, W, Hq, dh).
+
+    The per-slot attend_len = ctx_len + q_len drives the kernel's page
+    loop trip count directly — no pow2 window padding, so varying
+    attend_len across ticks never retraces. Block tables and both length
+    vectors ride as scalar prefetch.
+    """
+    _OP_CALLS["paged_decode_ragged"] += 1
+    quant = isinstance(k_pages, dict)
+    b, w, hq, dh = q.shape
+    hkv = (k_pages["codes"] if quant else k_pages).shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    rep = hq // hkv
+    # (B, W, Hq, dh) -> (B, Hkv, rep * w, dh), rep-major: row r * w + i is
+    # window position i of query head r under this KV head
+    q4 = jnp.moveaxis(q.reshape(b, w, hkv, rep, dh), 1, 3) \
+            .reshape(b, hkv, rep * w, dh)
+    block_table = jnp.asarray(block_table, jnp.int32)
+    ctx_len = jnp.asarray(ctx_len, jnp.int32)
+    q_len = jnp.asarray(q_len, jnp.int32)
+
+    op = "paged_decode_ragged_quant" if quant else "paged_decode_ragged"
+    entry = registry.resolve(op, impl)
+    if quant:
+        if kv_scheme is None:
+            raise ValueError("quantized KV pools need kv_scheme for the "
+                             "in-kernel codebook")
+        lut = spx.codebook(spx.scheme_levels(kv_scheme), dtype=jnp.float32)
+        args = (q4, k_pages["codes"], k_pages["scale"], v_pages["codes"],
+                v_pages["scale"], block_table, ctx_len, q_len, lut)
+        page_size = k_pages["codes"].shape[2]
+    else:
+        args = (q4, k_pages, v_pages, block_table, ctx_len, q_len)
+        page_size = k_pages.shape[2]
+
+    if entry.impl == "pallas" and planner.autotune_enabled():
+        # keyed per workload INCLUDING kv_scheme and the window w (spec
+        # K+1): dense vs codes+scale pools and decode vs verify windows
+        # share array shapes but not cost — winners must not collide
+        key = planner.fused_decode_key(b, hkv, rep, w, dh, page_size,
+                                       block_table.shape[1], kv_scheme)
+        if planner.measured_plan(key) is None \
+                and not isinstance(q4, jax.core.Tracer):
+            plan = planner.plan_fused_decode(
+                dh, rep=rep, w=w, page_size=page_size,
+                act_bytes=q.dtype.itemsize, kv_scheme=kv_scheme)
+
+            def runner(p):
+                del p
+                f = lambda: entry.fn(*args, w=w)
+                jax.block_until_ready(f())     # compile + warm
+                t0 = time.perf_counter()
+                jax.block_until_ready(f())
+                return time.perf_counter() - t0
+
+            planner.measured_best(key, [plan], runner)
+
+    out = entry.fn(*args, w=w)
+    # inverse of the rep-major packing
+    return jnp.moveaxis(out.reshape(b, hkv, rep, w, dh), 3, 1) \
+              .reshape(b, w, hq, dh)

@@ -32,7 +32,8 @@ import jax.experimental.pallas.tpu as pltpu
 
 from repro.compat import pallas_compiler_params
 
-__all__ = ["paged_attention_pallas", "paged_attention_quant_pallas"]
+__all__ = ["paged_attention_pallas", "paged_attention_quant_pallas",
+           "paged_decode_ragged_pallas", "paged_decode_ragged_quant_pallas"]
 
 _NEG_INF = -1e30
 
@@ -137,6 +138,216 @@ def _quant_kernel(bt_ref, ctx_ref, q_ref, kc_ref, ks_ref, vc_ref, vs_ref,
     @pl.when(j == n_logical - 1)
     def _finalize():
         _finalize_out(o_ref, m_ref, l_ref, acc_ref, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ragged decode megakernel: one launch per decode tick (plain decode AND the
+# spec-decode K+1 verify window ride the same ragged (slot, attend_len) grid)
+# ---------------------------------------------------------------------------
+
+def _ragged_page_update(q, k, v, ctx, qn, j, *, scale, page_size, w,
+                        m_ref, l_ref, acc_ref, k_scale=None, v_scale=None):
+    """One page's contribution for a ragged decode *window*: the query
+    block is (rep * w, dh) — w window rows per query head, rep-major —
+    and the causal mask is per-row: window position ``i = row % w``
+    attends positions <= ctx + i. Rows past ``qn`` (ragged window tails,
+    inactive slots) are masked entirely and their probabilities zeroed,
+    so l stays 0 and the finalize step emits exact zeros for them —
+    matching the ref oracle bit-for-bit in interpret mode."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if k_scale is not None:
+        s = s * k_scale
+    rows = q.shape[0]
+    win = jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 0) % w
+    pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (rows, page_size), 1)
+    mask = (pos <= ctx + win) & (win < qn)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]                # (rows, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # fully-masked rows keep m == _NEG_INF, where exp(s - m) would be 1 —
+    # the explicit zeroing keeps their l/acc at exactly 0
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    pv = p if v_scale is None else p * v_scale
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        pv.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _ragged_kernel(bt_ref, ctx_ref, qn_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, page_size: int,
+                   w: int, n_logical: int, out_dtype):
+    del bt_ref                    # consumed by the BlockSpec index maps
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _init_stats(m_ref, l_ref, acc_ref)
+
+    ctx = ctx_ref[b]
+    qn = qn_ref[b]
+
+    # per-slot trip count: the page loop runs while this slot still has
+    # attendable tokens (ctx + qn = its ragged attend_len) — no pow2
+    # window padding, inactive slots (ctx == qn == 0) skip every page
+    @pl.when(j * page_size < ctx + qn)
+    def _page():
+        _ragged_page_update(q_ref[0, 0], k_ref[0, 0], v_ref[0, 0], ctx, qn,
+                            j, scale=scale, page_size=page_size, w=w,
+                            m_ref=m_ref, l_ref=l_ref, acc_ref=acc_ref)
+
+    @pl.when(j == n_logical - 1)
+    def _finalize():
+        _finalize_out(o_ref, m_ref, l_ref, acc_ref, out_dtype)
+
+
+def _ragged_quant_kernel(bt_ref, ctx_ref, qn_ref, q_ref, kc_ref, ks_ref,
+                         vc_ref, vs_ref, lut_ref, o_ref, m_ref, l_ref,
+                         acc_ref, *, scale: float, page_size: int, w: int,
+                         n_logical: int, out_dtype):
+    """Fused-LUT ragged megakernel: K/V pages stream as uint8 codes +
+    per-token scale, the <=256-entry codebook sits in VMEM for the whole
+    grid, and dequantization happens page-by-page right before the MXU —
+    the §3.2 memory win on the one launch the decode tick makes."""
+    del bt_ref
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _init_stats(m_ref, l_ref, acc_ref)
+
+    ctx = ctx_ref[b]
+    qn = qn_ref[b]
+
+    @pl.when(j * page_size < ctx + qn)
+    def _page():
+        lut = lut_ref[...]
+        k = jnp.take(lut, kc_ref[0, 0].astype(jnp.int32), axis=0)
+        v = jnp.take(lut, vc_ref[0, 0].astype(jnp.int32), axis=0)
+        _ragged_page_update(q_ref[0, 0], k, v, ctx, qn, j, scale=scale,
+                            page_size=page_size, w=w, m_ref=m_ref,
+                            l_ref=l_ref, acc_ref=acc_ref,
+                            k_scale=ks_ref[0, 0][:, 0][None, :],
+                            v_scale=vs_ref[0, 0][:, 0][None, :])
+
+    @pl.when(j == n_logical - 1)
+    def _finalize():
+        _finalize_out(o_ref, m_ref, l_ref, acc_ref, out_dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w", "out_dtype", "interpret"))
+def paged_decode_ragged_pallas(q, k_pages, v_pages, block_table, ctx_len,
+                               q_len, *, w: int, out_dtype=None,
+                               interpret: bool = False):
+    """Ragged decode-window attention in one launch.
+
+    q: (B, Hkv, R, dh) with R = rep * w window rows per KV head
+    (rep-major: row ``r * w + i`` is window position i of query head r);
+    ``w`` is the static window length (spec K+1; 1 = plain decode);
+    q_len: (B,) int32 valid rows per slot (ragged; rows past it come back
+    zero); ctx_len: (B,) int32 tokens in the pages before the window.
+    Pools/block_table as in ``paged_attention_pallas``.
+    Returns (B, Hkv, R, dh).
+    """
+    b, hkv, rows, dh = q.shape
+    _, _, page_size, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    out_dtype = out_dtype or q.dtype
+    scale = 1.0 / (dh ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,             # block_table, ctx_len, q_len
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, dh),
+                         lambda bb, h, j, bt, ctx, qn: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, dh),
+                         lambda bb, h, j, bt, ctx, qn: (bt[bb, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, dh),
+                         lambda bb, h, j, bt, ctx, qn: (bt[bb, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, dh),
+                               lambda bb, h, j, bt, ctx, qn: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),     # running max m
+            pltpu.VMEM((rows, 1), jnp.float32),     # running denom l
+            pltpu.VMEM((rows, dh), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_kernel, scale=scale, page_size=page_size,
+                          w=w, n_logical=max_pages, out_dtype=out_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, dh), out_dtype),
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, ctx_len, q_len, q, k_pages, v_pages)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w", "out_dtype", "interpret"))
+def paged_decode_ragged_quant_pallas(q, k_codes, k_scale, v_codes, v_scale,
+                                     block_table, ctx_len, q_len, lut, *,
+                                     w: int, out_dtype=None,
+                                     interpret: bool = False):
+    """Fused-LUT ragged decode window over quantized (codes + scale) KV
+    pools: same grid and per-row causal masking as
+    ``paged_decode_ragged_pallas``, but each streamed page is 1-byte
+    codes + per-token scale, dequantized in VMEM against the resident
+    codebook before the MXU. Args as ``paged_attention_quant_pallas``
+    plus ``q_len``/``w``. Returns (B, Hkv, R, dh)."""
+    b, hkv, rows, dh = q.shape
+    _, _, page_size, _ = k_codes.shape
+    max_pages = block_table.shape[1]
+    out_dtype = out_dtype or q.dtype
+    scale = 1.0 / (dh ** 0.5)
+
+    def page_spec(width):
+        return pl.BlockSpec(
+            (1, 1, page_size, width),
+            lambda bb, h, j, bt, ctx, qn: (bt[bb, j], h, 0, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,             # block_table, ctx_len, q_len
+        grid=(b, hkv, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, dh),
+                         lambda bb, h, j, bt, ctx, qn: (bb, h, 0, 0)),
+            page_spec(dh),                 # k codes
+            page_spec(1),                  # k scale
+            page_spec(dh),                 # v codes
+            page_spec(1),                  # v scale
+            pl.BlockSpec(lut.shape,        # whole LUT, VMEM-resident
+                         lambda bb, h, j, bt, ctx, qn: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, dh),
+                               lambda bb, h, j, bt, ctx, qn: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),     # running max m
+            pltpu.VMEM((rows, 1), jnp.float32),     # running denom l
+            pltpu.VMEM((rows, dh), jnp.float32),    # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_quant_kernel, scale=scale,
+                          page_size=page_size, w=w, n_logical=max_pages,
+                          out_dtype=out_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, dh), out_dtype),
+        compiler_params=pallas_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_table, ctx_len, q_len, q, k_codes, k_scale, v_codes, v_scale,
+      lut)
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))

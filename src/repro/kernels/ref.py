@@ -11,7 +11,8 @@ import jax.numpy as jnp
 from repro.core import spx
 
 __all__ = ["spx_matmul_ref", "attention_ref", "paged_attention_ref",
-           "paged_attention_quant_ref"]
+           "paged_attention_quant_ref", "paged_decode_ragged_ref",
+           "paged_decode_ragged_quant_ref"]
 
 
 def spx_matmul_ref(x, codes, scale, lut, *, packed: bool, out_dtype=None):
@@ -98,6 +99,84 @@ def paged_attention_quant_ref(q, k_codes, k_scale, v_codes, v_scale,
     k = gather_dequant(k_codes, k_scale)
     v = gather_dequant(v_codes, v_scale)
     return _paged_softmax(q, k, v, ctx_len, out_dtype)
+
+
+def _ragged_softmax(q, k, v, ctx_len, q_len, w: int, out_dtype):
+    """Shared masked-softmax core of the ragged decode-window oracles.
+
+    q: (B, Hkv, R, dh) with R = rep * w rows ordered rep-major — row
+    ``r * w + i`` is window position ``i`` of the ``r``-th query head
+    sharing this KV head; k/v: (B, Hkv, S, dh) contiguous gathered views.
+    Window position ``i`` attends positions <= ctx_len + i (absolute
+    causality inside the window); rows at positions >= q_len are padding
+    and come back exactly zero.
+    """
+    dh = q.shape[-1]
+    r_rows = q.shape[2]
+    s_max = k.shape[2]
+    s = jnp.einsum("bhrd,bhkd->bhrk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    win = jnp.arange(r_rows) % w                          # (R,)
+    pos = jnp.arange(s_max)
+    row_ok = win[None, None, :, None] < q_len[:, None, None, None]
+    mask = (pos[None, None, None, :]
+            <= ctx_len[:, None, None, None] + win[None, None, :, None]) \
+        & row_ok
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhrk,bhkd->bhrd", p, v.astype(jnp.float32))
+    o = o / jnp.maximum(l, 1e-30)
+    # fully-masked rows (window padding, inactive slots) degenerate to a
+    # mean under the shifted softmax — force the kernel's all-zero output
+    o = jnp.where(row_ok, o, 0.0)
+    return o.astype(out_dtype)
+
+
+def paged_decode_ragged_ref(q, k_pages, v_pages, block_table, ctx_len,
+                            q_len, *, w: int, out_dtype=None):
+    """Ragged decode-window attention over a paged KV cache — the oracle
+    for the decode megakernel (one launch covers plain decode *and* the
+    spec-decode verify window).
+
+    q: (B, Hkv, R, dh), R = rep * w query rows per KV head, rep-major (row
+    ``r * w + i`` = window position i of query head r); ``w`` is the
+    static window length (spec K+1, or 1 for plain decode); q_len: (B,)
+    int32 valid window rows per slot (ragged — rows past it return zero);
+    ctx_len: (B,) int32 tokens in the pages *before* this window (window
+    position i attends positions <= ctx_len + i). k_pages/v_pages/
+    block_table as in ``paged_attention_ref``. Returns (B, Hkv, R, dh).
+    """
+    out_dtype = out_dtype or q.dtype
+    b, hkv, _, dh = q.shape
+    ps = k_pages.shape[2]
+    s_max = block_table.shape[1] * ps
+    k = jnp.moveaxis(k_pages[block_table], 2, 1).reshape(b, hkv, s_max, dh)
+    v = jnp.moveaxis(v_pages[block_table], 2, 1).reshape(b, hkv, s_max, dh)
+    return _ragged_softmax(q, k, v, ctx_len, q_len, w, out_dtype)
+
+
+def paged_decode_ragged_quant_ref(q, k_codes, k_scale, v_codes, v_scale,
+                                  block_table, ctx_len, q_len, lut, *,
+                                  w: int, out_dtype=None):
+    """Quantized-pool variant of ``paged_decode_ragged_ref``: pools hold
+    uint8 codebook codes + per-token f32 scale, dequantized after the page
+    gather (``lut[codes] * scale``) — the oracle the fused-LUT megakernel
+    must match. Args as ``paged_attention_quant_ref`` plus q_len/w."""
+    out_dtype = out_dtype or q.dtype
+    b, hkv, _, dh = q.shape
+    ps = k_codes.shape[2]
+    s_max = block_table.shape[1] * ps
+
+    def gather_dequant(codes, scale):
+        c = jnp.moveaxis(codes[block_table], 2, 1).reshape(b, hkv, s_max, dh)
+        a = jnp.moveaxis(scale[block_table], 2, 1).reshape(b, hkv, s_max, 1)
+        return jnp.take(lut, c.astype(jnp.int32), axis=0) * a
+
+    k = gather_dequant(k_codes, k_scale)
+    v = gather_dequant(v_codes, v_scale)
+    return _ragged_softmax(q, k, v, ctx_len, q_len, w, out_dtype)
 
 
 def attention_ref(q, k, v, *, causal: bool = True, out_dtype=None):

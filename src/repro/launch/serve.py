@@ -72,6 +72,16 @@ def main(argv=None):
     ap.add_argument("--spec-k", type=int, default=None, metavar="K",
                     help="draft window for --spec-decode (default 4; "
                          "passing it alone implies --spec-decode)")
+    fg = ap.add_mutually_exclusive_group()
+    fg.add_argument("--fused-decode", dest="fused_decode",
+                    action="store_true", default=None,
+                    help="ragged decode megakernel: one attention launch "
+                         "per decode tick (paged layout; default ON, "
+                         "REPRO_FUSED_DECODE=0 flips the default)")
+    fg.add_argument("--no-fused-decode", dest="fused_decode",
+                    action="store_false",
+                    help="per-call paged-attention kernels + page-gather "
+                         "verify (the pre-megakernel decode path)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="quantize the KV cache to codes+scale pages")
     ap.add_argument("--kv-scheme", default="spx_8_x3",
@@ -103,7 +113,8 @@ def main(argv=None):
                       kv_cache_dtype=(jnp.bfloat16 if args.kv_dtype == "bf16"
                                       else jnp.float32),
                       prefix_cache=args.prefix_cache,
-                      spec_decode=args.spec_decode, spec_k=args.spec_k)
+                      spec_decode=args.spec_decode, spec_k=args.spec_k,
+                      fused_decode=args.fused_decode)
 
     rng = np.random.default_rng(args.seed)
     sys_prompt = (rng.integers(0, cfg.vocab_size, args.shared_prefix)

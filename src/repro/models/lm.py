@@ -25,7 +25,8 @@ from repro.nn.transformer import (slot_init_cache, slot_init_paged_cache,
 
 __all__ = ["lm_init", "lm_loss", "lm_logits", "lm_prefill", "lm_decode_step",
            "init_caches", "paged_init_caches", "lm_paged_step",
-           "lm_paged_verify", "paged_copy_page", "chunked_ce"]
+           "lm_paged_verify", "lm_paged_fused_step", "paged_copy_page",
+           "chunked_ce"]
 
 LOSS_CHUNK = 256
 AUX_WEIGHT = 0.01
@@ -254,6 +255,31 @@ def lm_paged_verify(params, tokens, ctx_len, block_table, n_valid, caches,
     x = embedding_apply(params["embed"], tokens)
     h, new_caches = stack_paged(params["stack"], x, ctx_len, block_table,
                                 n_valid, cfg, rt, caches)
+    h = norm_apply(cfg.norm, params["final_norm"], h)
+    logits = jnp.dot(h, _head_w(params, cfg).astype(h.dtype))
+    return logits, new_caches
+
+
+def lm_paged_fused_step(params, tokens, ctx_len, block_table, n_valid,
+                        caches, cfg: ArchConfig, rt: Runtime):
+    """One fused decode tick: plain decode (C == 1) *and* the speculative
+    verify window (C == K+1) through the ragged decode megakernel — every
+    layer's attention is ONE ``paged_decode_ragged`` launch over the
+    batch's ragged (slot, attend_len) grid instead of a per-call kernel
+    plus page gathers.
+
+    Same contract as ``lm_paged_verify``: ``tokens`` (B, C) is each row's
+    next window (pending token + drafts, padded past ``n_valid``), and
+    logits come back at every window position, (B, C, V) — position j is
+    the distribution for the token after window token j. With C == 1 the
+    engine reads logits[:, 0] and this is exactly ``lm_paged_step``'s
+    decode tick, so one compiled function serves both tick shapes.
+    Rows past ``n_valid`` carry garbage logits (the kernel returns zeros
+    for them pre-head) — the engine only reads positions < n_valid.
+    """
+    x = embedding_apply(params["embed"], tokens)
+    h, new_caches = stack_paged(params["stack"], x, ctx_len, block_table,
+                                n_valid, cfg, rt, caches, fused=True)
     h = norm_apply(cfg.norm, params["final_norm"], h)
     logits = jnp.dot(h, _head_w(params, cfg).astype(h.dtype))
     return logits, new_caches

@@ -511,7 +511,8 @@ def _paged_chunk_attention(q, k_pages, v_pages, block_table, positions,
 def attn_paged_step(p: dict, x: jax.Array, ctx_len: jax.Array,
                     block_table: jax.Array, cache: dict, *, n_heads: int,
                     n_kv_heads: int, head_dim: int, n_valid: jax.Array,
-                    rope_theta: float = 10000.0, rt: Runtime):
+                    rope_theta: float = 10000.0, rt: Runtime,
+                    fused: bool = False):
     """Attention sublayer over the paged KV cache — one code path for both
     chunked prefill (C > 1) and decode (C == 1, dispatched to the
     paged-attention kernel via the registry).
@@ -522,7 +523,11 @@ def attn_paged_step(p: dict, x: jax.Array, ctx_len: jax.Array,
     neither written nor trusted); cache: {"kp", "vp"} physical pools —
     arrays, or {"codes", "scale"} dicts for the quantized pool
     (``rt.kv_scheme`` picks the level set; decode then dispatches to the
-    fused-dequant paged-attention kernel).
+    fused-dequant paged-attention kernel). ``fused`` routes the attention
+    through the ragged decode megakernel (``ops.paged_decode_ragged``) —
+    one launch for the whole ragged window, n_valid as the per-slot
+    ``q_len``, dense or quantized pools alike; the serving engine's
+    decode/verify tick sets it, chunked prefill keeps the gather path.
     Returns (y (B, C, D), new_cache).
     """
     b, c, _ = x.shape
@@ -534,7 +539,15 @@ def attn_paged_step(p: dict, x: jax.Array, ctx_len: jax.Array,
     kp, vp = paged_kv_write(cache["kp"], cache["vp"], k, v, block_table,
                             positions, valid, kv_scheme=rt.kv_scheme)
     attend_len = ctx_len + n_valid
-    if c == 1:
+    if fused:
+        # one megakernel launch for the whole (slot, attend_len) ragged
+        # window — window row i of slot b attends cache positions
+        # <= ctx_len[b] + i, rows past n_valid[b] come back zero (unused)
+        out = ops.paged_decode_ragged(
+            q, kp, vp, block_table, ctx_len, n_valid,
+            kv_scheme=rt.kv_scheme if quantized else None, impl=rt.impl)
+        o = out.reshape(b, c, n_heads * head_dim)
+    elif c == 1:
         q1 = q[:, 0].reshape(b, n_heads, head_dim)
         if quantized:
             out = ops.paged_attention_quant(q1, kp, vp, block_table,

@@ -117,7 +117,8 @@ def _cross_kv(p_attn: dict, enc_out: jax.Array, n_kv_heads: int,
 
 def _slot_apply(slot: str, p: dict, x, positions, cfg: ArchConfig,
                 rt: Runtime, *, mode: str, cache=None, pos=None,
-                enc_out=None, causal: bool = True, paged_ctx=None):
+                enc_out=None, causal: bool = True, paged_ctx=None,
+                fused: bool = False):
     """mode: 'train' | 'prefill' | 'decode' | 'paged'. Returns
     (x, new_cache, aux). Paged mode (serving: chunked prefill + paged
     decode through one path) takes ``paged_ctx = (ctx_len, block_table,
@@ -140,7 +141,7 @@ def _slot_apply(slot: str, p: dict, x, positions, cfg: ArchConfig,
                 p["attn"], h, ctx_len, block_table, cache,
                 n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
                 head_dim=cfg.dh, n_valid=n_valid,
-                rope_theta=cfg.rope_theta, rt=rt)
+                rope_theta=cfg.rope_theta, rt=rt, fused=fused)
         elif mode == "decode":
             y, kv = attn_decode_step(
                 p["attn"], h, pos, (cache["k"], cache["v"]),
@@ -267,7 +268,7 @@ def _sp_constrain(x, rt: Runtime):
 
 def _period_body(carry, xs, *, cfg: ArchConfig, rt: Runtime, mode: str,
                  positions=None, enc_out=None, causal: bool = True,
-                 paged_ctx=None):
+                 paged_ctx=None, fused: bool = False):
     if mode == "decode":
         x, pos, aux = carry
         slot_params, caches = xs
@@ -292,7 +293,8 @@ def _period_body(carry, xs, *, cfg: ArchConfig, rt: Runtime, mode: str,
                 xx = opt_barrier(xx)
             return _slot_apply(_slot, sp, xx, positions, cfg, rt, mode=mode,
                                cache=_cache, pos=pos, enc_out=enc_out,
-                               causal=causal, paged_ctx=paged_ctx)
+                               causal=causal, paged_ctx=paged_ctx,
+                               fused=fused)
         if mode == "train" and rt.remat != "none" and len(cfg.pattern) > 1:
             # hierarchical remat: the period body is already checkpointed;
             # checkpointing each slot too keeps the backward's recompute
@@ -357,14 +359,19 @@ def stack_decode(params: dict, x: jax.Array, pos, cfg: ArchConfig,
 
 
 def stack_paged(params: dict, x: jax.Array, ctx_len, block_table, n_valid,
-                cfg: ArchConfig, rt: Runtime, caches):
+                cfg: ArchConfig, rt: Runtime, caches, *,
+                fused: bool = False):
     """C-token step over the paged KV cache — chunked prefill (C > 1) and
     paged decode (C == 1) share this path. x: (B, C, D); ctx_len/n_valid:
     (B,) int32; block_table: (B, max_pages) int32; caches: per-slot
-    {"kp", "vp"} pools stacked over periods. Returns (x, new_caches)."""
+    {"kp", "vp"} pools stacked over periods. ``fused`` routes every
+    layer's attention through the ragged decode megakernel (serving
+    decode/verify ticks; prefill chunks stay on the gather path).
+    Returns (x, new_caches)."""
     def body(carry, xs):
         return _period_body(carry, xs, cfg=cfg, rt=rt, mode="paged",
-                            paged_ctx=(ctx_len, block_table, n_valid))
+                            paged_ctx=(ctx_len, block_table, n_valid),
+                            fused=fused)
     (x, _), new_caches = jax.lax.scan(
         body, (x, jnp.zeros((), jnp.float32)),
         (tuple(params["slots"]), tuple(caches)),

@@ -49,11 +49,11 @@ from typing import Callable, Optional
 from repro.core.pipeline import HwSpec, TPU_V5E, plan_matmul_blocks
 
 __all__ = [
-    "MatmulBlocks", "AttentionBlocks", "KVPagePlan", "plan_matmul",
-    "plan_attention", "plan_kv_pages", "plan_seq_pages",
-    "matmul_candidates", "autotune_enabled", "measured_best",
-    "measured_plan", "clear_plan_cache", "DEFAULT_BM",
-    "VMEM_BUDGET_FRACTION",
+    "MatmulBlocks", "AttentionBlocks", "KVPagePlan", "FusedDecodePlan",
+    "plan_matmul", "plan_attention", "plan_kv_pages", "plan_seq_pages",
+    "plan_fused_decode", "fused_decode_key", "matmul_candidates",
+    "autotune_enabled", "measured_best", "measured_plan",
+    "clear_plan_cache", "DEFAULT_BM", "VMEM_BUDGET_FRACTION",
 ]
 
 # bm candidate ceiling for tiny-M problems (M is padded to the chosen bm,
@@ -340,6 +340,100 @@ def plan_seq_pages(n_tokens: int, page_size: int, *,
     if page_size < 1 or n_tokens < 0 or not 0 <= shared_tokens <= n_tokens:
         raise ValueError((n_tokens, page_size, shared_tokens))
     return -(-n_tokens // page_size) - shared_tokens // page_size
+
+
+# ---------------------------------------------------------------------------
+# Fused ragged-decode megakernel sizing (serving)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FusedDecodePlan:
+    """VMEM model for one grid step of the ragged decode megakernel.
+
+    The kernel grids over (slot, kv_head, page); per step it holds the
+    whole (rep * w, dh) query window + f32 accumulator/stats resident,
+    double-buffers one K+V page pair (codes + per-token scale for a
+    quantized pool), and — quantized pools only — keeps the <=256-entry
+    codebook LUT pinned in VMEM for the entire launch.
+
+    rows         rep * w query rows per grid step (w = spec K+1, or 1)
+    lut_bytes    resident codebook bytes (0 for a dense pool)
+    pipelined    §3.1 condition for the page loop at this window size
+    margin       compute/load ratio for one (K, V) page pair
+    vmem_bytes   total per-step working set in bytes
+    """
+    rows: int
+    lut_bytes: int
+    pipelined: bool
+    margin: float
+    vmem_bytes: int
+
+
+@functools.lru_cache(maxsize=256)
+def _plan_fused_decode_cached(dh: int, rep: int, w: int, page_size: int,
+                              act_bytes: int, tok_bytes: int,
+                              lut_bytes: int, hw: HwSpec) -> FusedDecodePlan:
+    rows = rep * w
+    # per grid step: stream the next (K, V) page pair while the MXU runs
+    # QK^T + PV for all ``rows`` window rows on the current one
+    t_load = 2 * page_size * tok_bytes / hw.hbm_bw
+    t_compute = 4.0 * rows * page_size * dh / hw.peak_bf16_flops
+    vmem = (2 * 2 * page_size * tok_bytes     # double-buffered K+V pages
+            + rows * dh * act_bytes           # resident ragged q window
+            + rows * dh * 4 + 2 * rows * 4    # f32 acc + (m, l) scratch
+            + lut_bytes)                      # whole-launch-resident LUT
+    margin = t_compute / max(t_load, 1e-30)
+    return FusedDecodePlan(rows, lut_bytes, t_load <= t_compute, margin,
+                           int(vmem))
+
+
+def plan_fused_decode(dh: int, *, rep: int = 1, w: int = 1,
+                      page_size: int = 8, act_bytes: int = 2,
+                      kv_scheme: str | None = None,
+                      hw: HwSpec = TPU_V5E) -> FusedDecodePlan:
+    """Working-set model for the ragged decode megakernel.
+
+    Units: ``dh`` and ``page_size`` are element/token counts; ``rep = Hq //
+    Hkv``; ``w`` is the static decode window (spec K+1, or 1 for plain
+    decode); ``act_bytes`` the query/cache element width. ``kv_scheme``
+    switches the streamed-page byte model to the quantized codes+scale
+    layout *and* charges the scheme's codebook LUT as VMEM-resident for
+    the whole launch (it is prefetched once, not per page).
+
+    Always returns a plan — page geometry was already fixed by
+    ``plan_kv_pages`` at pool allocation, so there is no candidate search
+    here, just the §3.1 accounting for the window the engine runs. The w
+    factor is why the megakernel pays off: compute grows with ``rep * w``
+    per streamed page while load stays constant, so the verify window
+    pushes ``margin`` toward pipelined where single-row decode is
+    hopelessly HBM-bound.
+    """
+    if kv_scheme is not None:
+        from repro.core.spx import (code_width, kv_token_side_bytes,
+                                    scheme_levels)
+        tok_bytes = kv_token_side_bytes(dh)
+        # f32 codebook padded to the code width's power of two (spx.codebook)
+        lut_bytes = 4 * (1 << code_width(scheme_levels(kv_scheme)))
+    else:
+        tok_bytes, lut_bytes = dh * act_bytes, 0
+    return _plan_fused_decode_cached(dh, rep, w, page_size, act_bytes,
+                                     tok_bytes, lut_bytes, hw)
+
+
+def fused_decode_key(b: int, hkv: int, rep: int, w: int, dh: int,
+                     page_size: int, max_pages: int,
+                     kv_scheme: str | None) -> tuple:
+    """Measured-autotune / plan cache key for one megakernel workload.
+
+    ``kv_scheme`` and the window ``w`` (spec K+1) are deliberately part of
+    the key: a winner measured for a dense pool must not be reused for a
+    codes+scale pool of identical shape (different bytes/page, different
+    in-kernel dequant work), and a plain-decode winner (w=1) must not leak
+    into the verify window's workload (w=K+1) — they share every array
+    shape except the query rows.
+    """
+    return ("paged_decode_ragged", b, hkv, rep, w, dh, page_size,
+            max_pages, kv_scheme)
 
 
 # ---------------------------------------------------------------------------

@@ -20,9 +20,13 @@ The built-in kernels live in ``repro.kernels.ops`` and register themselves
 at import; ``resolve`` imports that module lazily so the registry package
 itself stays dependency-free. Current built-in ops: ``spx_matmul``,
 ``flash_attention``, ``paged_attention`` (serving decode over the paged KV
-cache — see docs/SERVING.md) and ``paged_attention_quant`` (same, over
+cache — see docs/SERVING.md), ``paged_attention_quant`` (same, over
 codes+scale quantized pools with fused codebook dequant —
-docs/QUANTIZATION.md).
+docs/QUANTIZATION.md), and ``paged_decode_ragged`` /
+``paged_decode_ragged_quant`` (the decode megakernel: one launch per
+serving decode tick over a ragged (slot, attend_len) grid, covering plain
+decode and the speculative verify window, with in-kernel LUT dequant for
+quantized pools).
 """
 from __future__ import annotations
 

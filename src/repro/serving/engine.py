@@ -117,7 +117,8 @@ class ServeEngine:
                  kv_cache_dtype=jnp.float32,
                  prefix_cache: bool | None = None,
                  spec_decode: bool | None = None,
-                 spec_k: int | None = None):
+                 spec_k: int | None = None,
+                 fused_decode: bool | None = None):
         self.cfg = cfg
         self.rt = rt or Runtime(impl="auto", q_chunk=256)
         self.batch_slots = batch_slots
@@ -190,6 +191,26 @@ class ServeEngine:
                     "(check REPRO_SPEC_K)")
         else:
             self.spec_k = 0
+
+        # fused ragged-decode megakernel (paged only): every decode tick —
+        # plain decode AND the draft-verify window — is one
+        # ``lm_paged_fused_step`` call whose per-layer attention is a
+        # single ``paged_decode_ragged`` launch over the batch's ragged
+        # (slot, attend_len) grid. Default ON for paged engines
+        # (REPRO_FUSED_DECODE=0 opts out); mirroring the other knobs, the
+        # env default degrades silently for a dense engine while an
+        # explicit True there is a caller error.
+        explicit_fused = fused_decode is not None
+        if fused_decode is None:
+            fused_decode = os.environ.get(
+                "REPRO_FUSED_DECODE", "1").lower() not in ("0", "false")
+        if fused_decode and kv_layout != "paged":
+            if explicit_fused:
+                raise ValueError(
+                    "fused_decode=True needs kv_layout='paged' — the "
+                    "megakernel decodes through the paged page pools")
+            fused_decode = False
+        self.fused_decode = bool(fused_decode)
 
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int64)   # tokens in cache
@@ -268,13 +289,24 @@ class ServeEngine:
         self._paged_step = jax.jit(lm_mod.lm_paged_step,
                                    static_argnums=(6, 7),
                                    donate_argnums=(5,))
+        if self.fused_decode:
+            # decode megakernel tick: ONE compiled function serves both
+            # tick shapes — plain decode (W == 1) and the spec verify
+            # window (W == spec_k + 1) — and inside it every layer's
+            # attention is one paged_decode_ragged launch
+            self._fused_step = jax.jit(lm_mod.lm_paged_fused_step,
+                                       static_argnums=(6, 7),
+                                       donate_argnums=(5,))
         if self.spec_k:
-            # multi-token verify: same paged step, logits at every window
-            # position; one compile serves every tick (fixed K+1 window,
-            # ragged rows ride on n_valid like prefill chunks do)
-            self._paged_verify = jax.jit(lm_mod.lm_paged_verify,
-                                         static_argnums=(6, 7),
-                                         donate_argnums=(5,))
+            if not self.fused_decode:
+                # multi-token verify: same paged step, logits at every
+                # window position; one compile serves every tick (fixed
+                # K+1 window, ragged rows ride on n_valid like prefill
+                # chunks do). The fused path scores windows through
+                # _fused_step instead.
+                self._paged_verify = jax.jit(lm_mod.lm_paged_verify,
+                                             static_argnums=(6, 7),
+                                             donate_argnums=(5,))
             self.drafter = PromptLookupDrafter()
         # copy-on-write page duplication; src/dst ride as traced scalars
         # so the one compile covers every page pair
@@ -404,6 +436,7 @@ class ServeEngine:
                      "cow_copies": self._cow_copies,
                      "spec_decode": bool(self.spec_k),
                      "spec_k": self.spec_k,
+                     "fused_decode": self.fused_decode,
                      # drafts accepted per drafted window (one window =
                      # one slot that proposed >= 1 draft this tick) /
                      # per proposed draft token — 0.0 until one ran
@@ -570,6 +603,9 @@ class ServeEngine:
                   if r is not None and self._fed[i] < 0]
         if not active:
             return
+        if self.fused_decode:
+            self._decode_step_fused(active)
+            return
         if self.spec_k:
             drafts = {}
             for i in active:
@@ -608,6 +644,62 @@ class ServeEngine:
                 self.drafter.extend(req.rid, int(tok))
             self._tokens_out += 1
             self.slot_pos[i] += 1
+            self._maybe_finish(i)
+
+    def _decode_step_fused(self, active):
+        """One megakernel decode tick for every decoding slot: plain
+        decode and draft-verify collapse onto a single
+        ``lm_paged_fused_step`` call over a fixed window W (spec_k + 1,
+        or 1 without speculation) — per-row ``n_valid`` carries the
+        ragged part (1 + drafts for this slot), so drafted and undrafted
+        rows share the launch instead of forking into separate
+        ``_paged_step`` / ``_paged_verify`` compiles. Acceptance,
+        rollback and drafter bookkeeping are identical to the unfused
+        path (``_accept_tokens`` with an empty draft list IS the plain
+        greedy/sampled pick, same key chain), so greedy outputs are
+        bit-identical fused vs unfused — regression-tested."""
+        w = (self.spec_k + 1) if self.spec_k else 1
+        drafts: dict[int, list[int]] = {i: [] for i in active}
+        if self.spec_k:
+            for i in active:
+                req = self.slot_req[i]
+                room = self._draft_room(req, int(self.slot_pos[i]))
+                if room > 0:
+                    drafts[i] = self.drafter.propose(req.rid,
+                                                     min(self.spec_k, room))
+        tokens = np.zeros((self.batch_slots, w), np.int32)
+        n_valid = np.zeros(self.batch_slots, np.int32)
+        ctx = np.zeros(self.batch_slots, np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            d = drafts[i]
+            tokens[i, 0] = req.output[-1]
+            if d:
+                tokens[i, 1:1 + len(d)] = d
+            n_valid[i] = 1 + len(d)
+            ctx[i] = self.slot_pos[i]
+        logits, self.caches = self._fused_step(
+            self.params, jnp.asarray(tokens), jnp.asarray(ctx),
+            jnp.asarray(self.block_tables), jnp.asarray(n_valid),
+            self.caches, self.cfg, self.rt)
+        self._model_calls += 1
+        logits = np.asarray(logits)                  # (B, W, V)
+        for i in active:
+            req = self.slot_req[i]
+            emitted = self._accept_tokens(req, drafts[i], logits[i])
+            accepted = len(emitted) - 1              # drafts kept
+            for tok in emitted:
+                req.output.append(int(tok))
+                if self.spec_k:
+                    self.drafter.extend(req.rid, int(tok))
+            self._tokens_out += len(emitted)
+            if drafts[i]:
+                self._spec_windows += 1
+            self._spec_proposed += len(drafts[i])
+            self._spec_accepted += accepted
+            # KV rollback: pending token + accepted drafts stay; the
+            # write cursor retreats past any rejected tail
+            self.slot_pos[i] = int(ctx[i]) + 1 + accepted
             self._maybe_finish(i)
 
     # -- speculative decoding (serving/spec.py has the drafter) --------------

@@ -1,0 +1,312 @@
+"""The ragged decode megakernel (ops.paged_decode_ragged) and the serving
+engine's fused decode tick (docs/SERVING.md §megakernel):
+
+* interpret-vs-ref kernel parity per KV scheme (dense, uniform8, sp2_8,
+  spx_8_x3) across the whole ragged surface — q_len from 0 (inactive
+  slot) through the full K+1 verify window, attend_len straddling page
+  boundaries — plus exact zeros for padded window rows,
+* the non-negotiable invariant: greedy engine outputs with the megakernel
+  ON are bit-identical to the unfused per-call decode path, across
+  {plain, kv_quant} x {spec on, spec off},
+* ONE launch per decode tick: the fused step traces the ragged op exactly
+  once, compiles exactly once, and never retraces across ticks with
+  varying attend_len / n_valid (no pow2-window padding to bucket on),
+* planner sizing (codes+scale pages + resident LUT) and the autotune key
+  separating kv_scheme and the spec window,
+* knobs: REPRO_FUSED_DECODE=0 opts out, explicit fused_decode=True on a
+  dense engine is an error, the env default degrades silently there.
+
+No hypothesis dependency — collected on the bare tier-1 environment.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import spx
+from repro.kernels import ops
+from repro.models import lm as lm_mod
+from repro.nn.attention import quantize_kv
+from repro.runtime import Runtime, planner
+from repro.serving.engine import Request, ServeEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+RT = Runtime(impl="ref", q_chunk=16)
+
+SCHEMES = (None, "uniform8", "sp2_8", "spx_8_x3")
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity: interpret (the Pallas body on CPU) vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+def _pools(rng, b, hkv, ps, max_pages, dh, scheme):
+    """Random page pools (+1 spare page so block tables can alias), the
+    block tables, and the (k, v) pool pair in the layout ``scheme`` asks
+    for (dense arrays, or codes+scale dicts)."""
+    n_pages = 1 + b * max_pages
+    kp = jnp.asarray(rng.standard_normal((n_pages, hkv, ps, dh)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, hkv, ps, dh)),
+                     jnp.float32)
+    bt = jnp.asarray(rng.integers(0, n_pages, (b, max_pages)), jnp.int32)
+    if scheme is None:
+        return kp, vp, bt
+    kq = dict(zip(("codes", "scale"), quantize_kv(kp, scheme)))
+    vq = dict(zip(("codes", "scale"), quantize_kv(vp, scheme)))
+    return kq, vq, bt
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_ragged_interpret_matches_ref(scheme):
+    rng = np.random.default_rng(11)
+    b, hq, hkv, dh, ps, mp, w = 4, 4, 2, 32, 8, 4, 4   # verify window K+1=4
+    kp, vp, bt = _pools(rng, b, hkv, ps, mp, dh, scheme)
+    q = jnp.asarray(rng.standard_normal((b, w, hq, dh)), jnp.float32)
+    # ragged surface: q_len 0 (inactive) .. w (full window); ctx at and
+    # around a page boundary so the per-slot trip count changes mid-batch
+    ctx = jnp.asarray([0, ps - 1, ps, ps + 1], jnp.int32)
+    qlen = jnp.asarray([0, 1, 3, w], jnp.int32)
+    kw = dict(kv_scheme=scheme) if scheme else {}
+    want = ops.paged_decode_ragged(q, kp, vp, bt, ctx, qlen, impl="ref",
+                                   **kw)
+    got = ops.paged_decode_ragged(q, kp, vp, bt, ctx, qlen,
+                                  impl="interpret", **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    # rows past q_len (and the whole inactive slot 0) are EXACT zeros in
+    # both impls — the engine relies on never reading garbage there
+    for out in (np.asarray(want), np.asarray(got)):
+        assert (out[0] == 0).all()
+        assert (out[1, 1:] == 0).all()
+        assert (out[2, 3:] == 0).all()
+        assert (out[3] != 0).any()
+
+
+def test_ragged_w1_bit_identical_to_paged_attention():
+    """W == 1 is plain decode: the ragged ref must equal the existing
+    single-token paged-attention ref bit for bit (attend_len = ctx + 1),
+    which is what makes fused-vs-unfused greedy outputs identical."""
+    rng = np.random.default_rng(5)
+    b, hq, hkv, dh, ps, mp = 3, 4, 2, 32, 8, 3
+    kp, vp, bt = _pools(rng, b, hkv, ps, mp, dh, None)
+    q = jnp.asarray(rng.standard_normal((b, 1, hq, dh)), jnp.float32)
+    ctx = jnp.asarray([ps - 1, ps, 2 * ps + 3], jnp.int32)
+    ones = jnp.ones((b,), jnp.int32)
+    ragged = ops.paged_decode_ragged(q, kp, vp, bt, ctx, ones, impl="ref")
+    plain = ops.paged_attention(q[:, 0], kp, vp, bt, ctx + 1, impl="ref")
+    assert (np.asarray(ragged[:, 0]) == np.asarray(plain)).all()
+
+
+def test_ragged_quant_needs_scheme():
+    rng = np.random.default_rng(0)
+    kq, vq, bt = _pools(rng, 2, 1, 8, 2, 16, "uniform8")
+    q = jnp.zeros((2, 1, 2, 16), jnp.float32)
+    lens = jnp.ones((2,), jnp.int32)
+    with pytest.raises(ValueError, match="kv_scheme"):
+        ops.paged_decode_ragged(q, kq, vq, bt, lens, lens, impl="ref")
+
+
+def test_registry_has_ragged_ops():
+    from repro.runtime import registry
+    for op in ("paged_decode_ragged", "paged_decode_ragged_quant"):
+        assert set(registry.available_impls(op)) >= {"ref", "interpret"}
+        assert registry.resolve(op, "auto").impl == "ref"   # CPU
+
+
+# ---------------------------------------------------------------------------
+# One launch per tick + the pow2-padding retrace hazard
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    # pinned exact-greedy workload (see tests/test_spec_decode.py): vocab
+    # 32 keeps random-init top-2 logit gaps wide, so equality assertions
+    # compare decode paths instead of coin-flip near-ties
+    return dataclasses.replace(reduced(get_config("gemma-2b"), vocab=32),
+                               head_dim=128)
+
+
+def test_fused_step_single_trace_across_ragged_ticks():
+    """The megakernel step compiles ONCE and traces the ragged attention
+    op ONCE — varying attend_len / n_valid across ticks rides in the
+    scalar-prefetch data, not the trace, so there is no pow2 bucketing
+    and no retrace (the Runtime-test discipline, now for raggedness)."""
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(3), cfg)
+    caches = lm_mod.paged_init_caches(cfg, n_pages=8, page_size=8,
+                                      dtype=jnp.float32)
+    step = jax.jit(lm_mod.lm_paged_fused_step, static_argnums=(6, 7))
+    bt = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    w = 4
+    tokens = jnp.zeros((2, w), jnp.int32)
+    ops.reset_op_calls()
+    ticks = [([3, 9], [1, 4]), ([4, 13], [4, 1]),     # ragged + page
+             ([8, 14], [2, 3]), ([0, 17], [0, 2])]    # boundary crossings
+    for ctx, nv in ticks:
+        logits, caches = step(params, tokens, jnp.asarray(ctx, jnp.int32),
+                              bt, jnp.asarray(nv, jnp.int32), caches, cfg,
+                              RT)
+    assert logits.shape == (2, w, cfg.vocab_size)
+    assert step._cache_size() == 1                    # zero retrace
+    calls = ops.op_calls()
+    # one trace, one ragged-op call site inside it (the layer scan traces
+    # its body once) — and the legacy per-call decode ops never appear
+    assert calls.get("paged_decode_ragged") == 1
+    assert calls.get("paged_attention") is None
+    assert calls.get("paged_attention_quant") is None
+
+
+def test_engine_fused_tick_is_one_compile_one_launch():
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(3), cfg)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64,
+                      quantize=None, rt=RT, kv_layout="paged",
+                      fused_decode=True)
+    rng = np.random.default_rng(3)
+    for i in range(4):
+        p = rng.integers(0, cfg.vocab_size,
+                         int(rng.integers(4, 24))).astype(np.int32)
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+    ops.reset_op_calls()
+    eng.run()
+    # ragged prompt lengths + continuous batching varied attend_len and
+    # n_valid across every tick; still one compiled fused step ...
+    assert eng._fused_step._cache_size() == 1
+    # ... whose single trace carried the tick's single ragged launch
+    assert ops.op_calls().get("paged_decode_ragged") == 1
+    m = eng.metrics()
+    assert m["fused_decode"] is True
+    assert m["model_calls"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Engine bit-identity: megakernel on vs off
+# ---------------------------------------------------------------------------
+
+def _drive(params, cfg, prompts, *, fused, kv_quant=False, spec=False,
+           new_tokens=8):
+    rt = dataclasses.replace(RT, kv_quant=kv_quant,
+                             kv_scheme="spx_8_x3" if kv_quant else RT.kv_scheme)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64,
+                      quantize="sp2_4", rt=rt, kv_layout="paged",
+                      fused_decode=fused,
+                      spec_decode=True if spec else None,
+                      spec_k=3 if spec else None)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=new_tokens))
+    out = {r.rid: list(r.output) for r in eng.run()}
+    return out, eng.metrics()
+
+
+@pytest.mark.parametrize("kv_quant", [False, True])
+@pytest.mark.parametrize("spec", [False, True])
+def test_fused_greedy_bit_identical_to_unfused(kv_quant, spec):
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(3)
+    # repetition-heavy tails give the n-gram drafter something to accept
+    prompts = [np.tile(rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                       3) for _ in range(4)]
+    fused_out, fm = _drive(params, cfg, prompts, fused=True,
+                           kv_quant=kv_quant, spec=spec)
+    plain_out, pm = _drive(params, cfg, prompts, fused=False,
+                           kv_quant=kv_quant, spec=spec)
+    assert fused_out == plain_out
+    assert fm["fused_decode"] and not pm["fused_decode"]
+    assert fm["tokens_generated"] == pm["tokens_generated"]
+    if spec:
+        # speculation stays effective through the megakernel: fewer model
+        # calls than tokens means some windows accepted drafts
+        assert fm["draft_acceptance_rate"] > 0.0
+
+
+def test_fused_sampled_matches_unfused_key_chain():
+    """Temperature sampling: the fused tick consumes the per-request key
+    chain exactly like the unfused one (one draw per emitted token), so
+    seeded sampled outputs are identical too."""
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(2)]
+
+    def run(fused):
+        eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64,
+                          quantize=None, rt=RT, kv_layout="paged",
+                          fused_decode=fused)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6,
+                               temperature=0.8, seed=17 + i))
+        return {r.rid: list(r.output) for r in eng.run()}
+
+    assert run(True) == run(False)
+
+
+# ---------------------------------------------------------------------------
+# Knobs
+# ---------------------------------------------------------------------------
+
+def test_fused_decode_knobs(monkeypatch):
+    cfg = _tiny_cfg()
+    params = lm_mod.lm_init(jax.random.PRNGKey(3), cfg)
+    # default ON for paged engines
+    assert ServeEngine(params, cfg, quantize=None, rt=RT,
+                       kv_layout="paged").fused_decode is True
+    # REPRO_FUSED_DECODE=0 flips the default off
+    monkeypatch.setenv("REPRO_FUSED_DECODE", "0")
+    assert ServeEngine(params, cfg, quantize=None, rt=RT,
+                       kv_layout="paged").fused_decode is False
+    monkeypatch.delenv("REPRO_FUSED_DECODE")
+    # dense engine: the env/default degrades silently ...
+    dense = ServeEngine(params, cfg, quantize=None, rt=RT,
+                        kv_layout="dense")
+    assert dense.fused_decode is False
+    # ... but an explicit True there is a caller error
+    with pytest.raises(ValueError, match="fused_decode"):
+        ServeEngine(params, cfg, quantize=None, rt=RT, kv_layout="dense",
+                    fused_decode=True)
+
+
+# ---------------------------------------------------------------------------
+# Planner model + autotune key
+# ---------------------------------------------------------------------------
+
+def test_plan_fused_decode_byte_model():
+    dense = planner.plan_fused_decode(128, rep=4, w=5, page_size=16,
+                                      act_bytes=4)
+    quant = planner.plan_fused_decode(128, rep=4, w=5, page_size=16,
+                                      act_bytes=4, kv_scheme="spx_8_x3")
+    assert dense.rows == quant.rows == 20
+    assert dense.lut_bytes == 0
+    # 8-bit code schemes: 256-entry f32 LUT resident for the launch
+    assert quant.lut_bytes == 4 * 256
+    # codes+scale pages stream fewer bytes than f32 pages, so the quant
+    # kernel's margin is strictly better at the same window
+    assert quant.margin > dense.margin
+    assert dense.vmem_bytes > 0 and quant.vmem_bytes > 0
+    # a wider window adds compute per streamed page, never load
+    w1 = planner.plan_fused_decode(128, rep=4, w=1, page_size=16,
+                                   act_bytes=4)
+    assert dense.margin > w1.margin
+
+
+def test_fused_decode_key_separates_scheme_and_window():
+    base = dict(b=4, hkv=2, rep=4, dh=128, page_size=16, max_pages=8)
+    k_dense = planner.fused_decode_key(w=1, kv_scheme=None, **base)
+    k_quant = planner.fused_decode_key(w=1, kv_scheme="spx_8_x3", **base)
+    k_verify = planner.fused_decode_key(w=5, kv_scheme=None, **base)
+    k_uniform = planner.fused_decode_key(w=1, kv_scheme="uniform8", **base)
+    assert len({k_dense, k_quant, k_verify, k_uniform}) == 4
+    # and the measured-plan table keys on it: a winner cached for one
+    # scheme/window is invisible to the others
+    planner.clear_plan_cache()
+    plan = planner.plan_fused_decode(128, rep=4, w=1, page_size=16)
+    assert planner.measured_best(k_dense, [plan], lambda p: 1.0) is plan
+    assert planner.measured_plan(k_dense) is plan
+    assert planner.measured_plan(k_quant) is None
+    assert planner.measured_plan(k_verify) is None
+    planner.clear_plan_cache()
