@@ -23,6 +23,17 @@ off vs on, asserting bit-identical greedy outputs, strictly fewer model
 calls, and draft acceptance > 0 — both plain paged and paged+SPx-KV
 (docs/SERVING.md, speculative decoding).
 
+A fourth scenario replays a bursty oversubscribed arrival process —
+low-priority background requests that fill the page pool, then a
+high-priority burst mid-run — through the synchronous FIFO scheduler and
+the continuous-batching scheduler on the SAME pool geometry, plain and
+SPx-quantized KV. Asserted: the cb engine preempts (preemptions > 0,
+offload_bytes == onload_bytes > 0, prefix_evictions > 0 under a
+1-page prefix-cache budget) while every request's greedy output stays
+bit-identical to the FIFO baseline (CPU; reported elsewhere). The
+`preemptions` / `offload_bytes` / `prefix_evictions` totals are copied
+to the top level of BENCH_serving.json for the CI checks job.
+
 Standalone:  PYTHONPATH=src python -m benchmarks.serving_bench
 From run.py: writes BENCH_serving.json at the repo root.
 """
@@ -152,6 +163,12 @@ def run(csv_rows, *, requests: int = 10, slots: int = 4, max_seq: int = 64,
                                                     rt)
     result["spec_decode"] = _spec_decode_scenario(csv_rows, params, cfg,
                                                   rt)
+    bursty = _bursty_scenario(csv_rows, params, cfg, rt)
+    result["bursty"] = bursty
+    # the three scheduler headline counters CI asserts on (ISSUE 7):
+    # summed across the plain and SPx cb axes of the bursty scenario
+    for k in ("preemptions", "offload_bytes", "prefix_evictions"):
+        result[k] = bursty[k]
 
     with open(out_path, "w") as fh:
         json.dump(result, fh, indent=2, sort_keys=True)
@@ -306,6 +323,114 @@ def _spec_decode_scenario(csv_rows, params, cfg, rt, *, requests: int = 6,
         csv_rows.append((f"serving/spec_{axis}_model_calls_ratio", 0.0,
                          on["model_calls"] / off["model_calls"]))
         report[axis] = {"off": off, "on": on}
+    return report
+
+
+def _bursty_scenario(csv_rows, params, cfg, rt, *, seed: int = 3) -> dict:
+    """Bursty oversubscribed arrival process, FIFO vs continuous batching.
+
+    Two priority-0 background requests (4 pages each) fill an 8-page pool
+    at tick 0; three priority-5 burst requests (3 pages each) arrive at
+    ticks 3-4 with zero free pages, so the cb scheduler must preempt a
+    background — offloading its written KV pages to the host tier — and
+    resume it after the burst drains. Every prompt shares a 2-page system
+    prefix and the cb engine runs the prefix cache under a 1-page budget,
+    so finishing requests overflow the cached-free index and force LRU
+    evictions. The FIFO engine replays the identical arrival schedule on
+    the identical pool.
+
+    Asserted on every backend (scheduling/accounting claims — they depend
+    only on request lengths, never on numerics): cb preempts > 0 times,
+    offload_bytes == onload_bytes > 0, ends with an empty host tier, and
+    evicts > 0 prefix pages; fifo does none of that. Asserted on CPU,
+    where greedy argmaxes are deterministic across batch compositions:
+    per-request outputs bit-identical fifo vs cb, plain AND SPx-quantized
+    pools (the acceptance criterion for the continuous-batching PR)."""
+    import jax
+    from repro.serving.engine import Request, ServeEngine
+
+    page_size, slots, pool_pages, max_seq = 8, 2, 8, 48
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 2 * page_size) \
+        .astype(np.int32)
+    # (arrival_tick, rid, tail_tokens, new_tokens, priority)
+    schedule = [(0, 0, 10, 6, 0), (0, 1, 10, 6, 0),     # background: 4 pg
+                (3, 2, 4, 4, 5), (3, 3, 4, 4, 5),       # burst: 3 pg
+                (4, 4, 4, 4, 5)]
+    tails = {rid: rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+             for _, rid, n, _, _ in schedule}
+
+    def drive(eng):
+        """Replay the arrival schedule through public step()/run()."""
+        pending = sorted(schedule)
+        i = 0
+        for t in range(len(pending) * 8):
+            while i < len(pending) and pending[i][0] <= t:
+                _, rid, _, new, pri = pending[i]
+                eng.submit(Request(
+                    rid=rid,
+                    prompt=np.concatenate([sys_prompt, tails[rid]]),
+                    max_new_tokens=new, priority=pri))
+                i += 1
+            if i == len(pending):
+                break
+            eng.step()
+        eng.run(max_steps=400)
+        assert eng.drained
+        return {r.rid: r.output for r in eng.finished}
+
+    axes = {"paged": rt,
+            "paged-spx": rt.replace(kv_quant=True, kv_scheme=SPX_SCHEME)}
+    report: dict = {"config": {"schedule": schedule, "page_size": page_size,
+                               "batch_slots": slots,
+                               "pool_pages": pool_pages,
+                               "system_prompt_tokens": int(len(sys_prompt)),
+                               "prefix_cache_pages": 1},
+                    "preemptions": 0, "offload_bytes": 0,
+                    "prefix_evictions": 0}
+    print("\n== serving: bursty oversubscription, fifo vs cb scheduler ==")
+    for axis, ert in axes.items():
+        outs, mets = {}, {}
+        for sched in ("fifo", "cb"):
+            eng = ServeEngine(params, cfg, batch_slots=slots,
+                              max_seq=max_seq, quantize="sp2_4", rt=ert,
+                              kv_layout="paged", page_size=page_size,
+                              pool_pages=pool_pages, scheduler=sched,
+                              prefix_cache=(sched == "cb"),
+                              prefix_cache_pages=(1 if sched == "cb"
+                                                  else None))
+            outs[sched] = drive(eng)
+            mets[sched] = eng.metrics()
+        cb, fifo = mets["cb"], mets["fifo"]
+        print(f"  {axis:10s}: preemptions {cb['preemptions']}  "
+              f"offload {cb['offload_bytes']} B  "
+              f"prefix evictions {cb['prefix_evictions']}  "
+              f"(fifo: denials {fifo['admission_denials']})")
+        # scheduling claims — deterministic on any backend
+        assert cb["preemptions"] > 0, f"{axis}: burst never preempted"
+        assert cb["resumes"] > 0, axis
+        assert cb["offload_bytes"] == cb["onload_bytes"] > 0, \
+            (axis, cb["offload_bytes"], cb["onload_bytes"])
+        assert cb["host_pages_in_use"] == 0, \
+            f"{axis}: host tier not drained"
+        assert cb["prefix_evictions"] > 0, \
+            f"{axis}: 1-page cache budget never evicted"
+        assert fifo["preemptions"] == fifo["offload_bytes"] == 0
+        agree = outs["cb"] == outs["fifo"]
+        if jax.default_backend() == "cpu":
+            assert agree, f"{axis}: cb scheduler changed greedy outputs"
+        elif not agree:
+            print(f"  WARNING: {axis} cb vs fifo outputs differ (near-tie "
+                  "flips across batch compositions — not asserted off CPU)")
+        report[f"greedy_agreement_{axis}"] = float(agree)
+        report[axis] = {"fifo": fifo, "cb": cb}
+        report["preemptions"] += cb["preemptions"]
+        report["offload_bytes"] += cb["offload_bytes"]
+        report["prefix_evictions"] += cb["prefix_evictions"]
+        csv_rows.append((f"serving/bursty_{axis}_preemptions", 0.0,
+                         cb["preemptions"]))
+        csv_rows.append((f"serving/bursty_{axis}_offload_kib", 0.0,
+                         cb["offload_bytes"] / 2**10))
     return report
 
 

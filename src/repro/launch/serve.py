@@ -18,11 +18,18 @@ an n-gram drafter proposes up to --spec-k tokens per decode tick and one
 verify pass scores the whole window, so repetitive outputs cost fewer
 model calls per token — docs/SERVING.md.
 
+--scheduler picks the admission policy: 'cb' (continuous batching —
+priority admission with preemption + KV page offload to a host tier,
+the paged default) or 'fifo' (the synchronous head-blocks-queue
+baseline). --host-pages bounds the offload tier, --prefix-cache-pages
+bounds the cached-free prefix index (LRU eviction) — docs/SERVING.md.
+
 Env knobs that reach serving: REPRO_PAGE_SIZE (tokens per KV page),
 REPRO_PREFILL_CHUNK (chunked-prefill length), REPRO_PREFIX_CACHE=1
 (prefix cache default), REPRO_SPEC_K=N (speculative decoding default +
-window), REPRO_BLOCKS_* / REPRO_AUTOTUNE (kernel tiles) — see
-docs/SERVING.md.
+window), REPRO_SCHEDULER / REPRO_HOST_PAGES / REPRO_PREFIX_CACHE_PAGES
+(scheduler + two-tier pool defaults), REPRO_BLOCKS_* / REPRO_AUTOTUNE
+(kernel tiles) — see docs/SERVING.md.
 """
 from __future__ import annotations
 
@@ -82,6 +89,20 @@ def main(argv=None):
                     action="store_false",
                     help="per-call paged-attention kernels + page-gather "
                          "verify (the pre-megakernel decode path)")
+    ap.add_argument("--scheduler", default=None, choices=("fifo", "cb"),
+                    help="admission policy: cb = continuous batching with "
+                         "priority preemption + KV offload (paged default), "
+                         "fifo = synchronous head-blocks-queue baseline "
+                         "(REPRO_SCHEDULER sets the default)")
+    ap.add_argument("--host-pages", type=int, default=None, metavar="N",
+                    help="host offload tier capacity in pages (paged "
+                         "layout; default unbounded, REPRO_HOST_PAGES "
+                         "sets the default)")
+    ap.add_argument("--prefix-cache-pages", type=int, default=None,
+                    metavar="N",
+                    help="cached-free prefix index budget in pages — LRU "
+                         "eviction past it (default unbounded, "
+                         "REPRO_PREFIX_CACHE_PAGES sets the default)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="quantize the KV cache to codes+scale pages")
     ap.add_argument("--kv-scheme", default="spx_8_x3",
@@ -114,7 +135,9 @@ def main(argv=None):
                                       else jnp.float32),
                       prefix_cache=args.prefix_cache,
                       spec_decode=args.spec_decode, spec_k=args.spec_k,
-                      fused_decode=args.fused_decode)
+                      fused_decode=args.fused_decode,
+                      scheduler=args.scheduler, host_pages=args.host_pages,
+                      prefix_cache_pages=args.prefix_cache_pages)
 
     rng = np.random.default_rng(args.seed)
     sys_prompt = (rng.integers(0, cfg.vocab_size, args.shared_prefix)
@@ -149,10 +172,19 @@ def main(argv=None):
               f"peak {m['occupancy_peak']:.2f}, "
               f"peak KV {m['peak_kv_bytes'] / 2**20:.2f} MiB, "
               f"denials {m['admission_denials']}")
+        if m["scheduler"] == "cb":
+            host_cap = ("inf" if m["host_pages"] is None
+                        else m["host_pages"])
+            print(f"[serve] cb scheduler: {m['preemptions']} preemptions, "
+                  f"{m['resumes']} resumes, "
+                  f"{m['offload_bytes'] / 2**10:.1f} KiB offloaded, "
+                  f"host tier peak {m['peak_host_pages']}/{host_cap} pages")
         if m["prefix_cache"]:
             print(f"[serve] prefix cache: {m['prefix_hits']} hits, "
                   f"{m['prefill_tokens_skipped']} prefill tokens skipped, "
-                  f"{m['cow_copies']} COW copies")
+                  f"{m['cow_copies']} COW copies, hit rate "
+                  f"{m['prefix_hit_rate']:.2f}, "
+                  f"{m['prefix_evictions']} evictions")
         if m["spec_decode"]:
             print(f"[serve] spec decode: K={m['spec_k']}, "
                   f"{m['model_calls']} model calls, "

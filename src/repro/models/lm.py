@@ -26,7 +26,7 @@ from repro.nn.transformer import (slot_init_cache, slot_init_paged_cache,
 __all__ = ["lm_init", "lm_loss", "lm_logits", "lm_prefill", "lm_decode_step",
            "init_caches", "paged_init_caches", "lm_paged_step",
            "lm_paged_verify", "lm_paged_fused_step", "paged_copy_page",
-           "chunked_ce"]
+           "paged_gather_pages", "paged_scatter_pages", "chunked_ce"]
 
 LOSS_CHUNK = 256
 AUX_WEIGHT = 0.01
@@ -212,6 +212,27 @@ def paged_copy_page(caches, src, dst):
     def cp(leaf):
         return leaf.at[:, dst].set(leaf[:, src])
     return jax.tree_util.tree_map(cp, caches)
+
+
+def paged_gather_pages(caches, pages):
+    """Gather whole physical KV pages across every cache leaf: the
+    serving engine's preemption snapshot. ``pages`` is a (n,) int32 page
+    index vector; each ``(P, n_pages, Hkv, page_size, dh)`` leaf yields
+    ``(P, n, Hkv, page_size, dh)``. The index vector is traced, so one
+    jit per padded length serves every page set of that size (the engine
+    pads to powers of two, duplicating the last page — callers slice the
+    duplicates off host-side)."""
+    return jax.tree_util.tree_map(lambda leaf: leaf[:, pages], caches)
+
+
+def paged_scatter_pages(caches, pages, payload):
+    """Scatter snapshotted pages back into the pool: the inverse of
+    ``paged_gather_pages``, used when a preempted sequence resumes into
+    freshly allocated pages. Duplicate indices in ``pages`` (the engine's
+    pow2 padding) carry identical payload rows, so the write is
+    deterministic regardless of scatter order."""
+    return jax.tree_util.tree_map(
+        lambda leaf, pay: leaf.at[:, pages].set(pay), caches, payload)
 
 
 def lm_paged_step(params, tokens, ctx_len, block_table, n_valid, caches,

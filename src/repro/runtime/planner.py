@@ -51,6 +51,7 @@ from repro.core.pipeline import HwSpec, TPU_V5E, plan_matmul_blocks
 __all__ = [
     "MatmulBlocks", "AttentionBlocks", "KVPagePlan", "FusedDecodePlan",
     "plan_matmul", "plan_attention", "plan_kv_pages", "plan_seq_pages",
+    "plan_resume_pages",
     "plan_fused_decode", "fused_decode_key", "matmul_candidates",
     "autotune_enabled", "measured_best", "measured_plan",
     "clear_plan_cache", "DEFAULT_BM", "VMEM_BUDGET_FRACTION",
@@ -340,6 +341,29 @@ def plan_seq_pages(n_tokens: int, page_size: int, *,
     if page_size < 1 or n_tokens < 0 or not 0 <= shared_tokens <= n_tokens:
         raise ValueError((n_tokens, page_size, shared_tokens))
     return -(-n_tokens // page_size) - shared_tokens // page_size
+
+
+def plan_resume_pages(n_written: int, n_total: int,
+                      page_size: int) -> tuple[int, int]:
+    """Page plan for resuming a preempted sequence:
+    ``(pages_total, pages_restored)``.
+
+    ``pages_total`` is the full worst-case reservation the sequence needs
+    back on device (``plan_seq_pages`` of its prompt + max_new budget —
+    resumption re-reserves exactly what admission did, so a resumed
+    request can never OOM mid-decode any more than a fresh one can).
+    ``pages_restored`` is the leading slice of that reservation which
+    must be refilled from the host snapshot: the pages covering the
+    ``n_written`` tokens that were actually in the cache at preemption
+    (the write cursor) — everything past the cursor is unwritten (or a
+    rejected speculative tail that was never attended) and restores as
+    blank pages for free. No prefix sharing: the restored bytes are
+    private by construction.
+    """
+    if not 0 <= n_written <= n_total:
+        raise ValueError((n_written, n_total, page_size))
+    return (plan_seq_pages(n_total, page_size),
+            plan_seq_pages(n_written, page_size))
 
 
 # ---------------------------------------------------------------------------

@@ -93,13 +93,22 @@ class Request:
     #: either way every draw comes from this request's own key chain —
     #: sampled outputs cannot depend on submit order or batch-mates.
     seed: Optional[int] = None
+    #: SLA class for the continuous-batching scheduler: higher values
+    #: admit first and may preempt strictly-lower-priority residents;
+    #: ties break FIFO by submit order. The FIFO scheduler ignores it.
+    priority: int = 0
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
     t_enqueue: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    preemptions: int = 0            # times this request was preempted
     key: object = dataclasses.field(default=None, repr=False)
+    # scheduler internals: submit-order tiebreak, and the (write cursor,
+    # prefill progress) pair a preempted request resumes from
+    _seq: int = dataclasses.field(default=0, repr=False)
+    _resume: object = dataclasses.field(default=None, repr=False)
 
 
 def _pad_pow2(n: int, cap: int) -> int:
@@ -118,7 +127,10 @@ class ServeEngine:
                  prefix_cache: bool | None = None,
                  spec_decode: bool | None = None,
                  spec_k: int | None = None,
-                 fused_decode: bool | None = None):
+                 fused_decode: bool | None = None,
+                 scheduler: str | None = None,
+                 host_pages: int | None = None,
+                 prefix_cache_pages: int | None = None):
         self.cfg = cfg
         self.rt = rt or Runtime(impl="auto", q_chunk=256)
         self.batch_slots = batch_slots
@@ -212,6 +224,51 @@ class ServeEngine:
             fused_decode = False
         self.fused_decode = bool(fused_decode)
 
+        # scheduler: "cb" (continuous batching — priority admission with
+        # preemption + KV offload, the paged default) or "fifo" (the
+        # original synchronous head-blocks-queue policy, kept as the
+        # differential-test baseline). REPRO_SCHEDULER overrides the
+        # default; mirroring the other knobs, an env-selected "cb"
+        # degrades silently to fifo for a dense engine while an explicit
+        # one there is a caller error (preemption snapshots live in the
+        # page pool — the dense layout has nothing to offload).
+        explicit_sched = scheduler is not None
+        if scheduler is None:
+            scheduler = (os.environ.get("REPRO_SCHEDULER", "")
+                         or ("cb" if kv_layout == "paged" else "fifo"))
+        if scheduler not in ("fifo", "cb"):
+            raise ValueError(
+                f"scheduler must be 'fifo' or 'cb', got {scheduler!r} "
+                "(check REPRO_SCHEDULER)")
+        if scheduler == "cb" and kv_layout != "paged":
+            if explicit_sched:
+                raise ValueError(
+                    "scheduler='cb' needs kv_layout='paged' — preemption "
+                    "offloads KV pages and the dense layout has none")
+            scheduler = "fifo"
+        self.scheduler = scheduler
+
+        # two-tier pool knobs (paged only): host_pages bounds the host
+        # offload tier, prefix_cache_pages bounds the cached-free prefix
+        # index (LRU eviction past it). Same explicit-raise / env-degrade
+        # contract as every other paged-only knob.
+        env_host = os.environ.get("REPRO_HOST_PAGES", "")
+        env_cache = os.environ.get("REPRO_PREFIX_CACHE_PAGES", "")
+        explicit_tier = host_pages is not None or prefix_cache_pages is not None
+        if host_pages is None and env_host:
+            host_pages = int(env_host)
+        if prefix_cache_pages is None and env_cache:
+            prefix_cache_pages = int(env_cache)
+        if kv_layout != "paged" and (host_pages is not None
+                                     or prefix_cache_pages is not None):
+            if explicit_tier:
+                raise ValueError(
+                    "host_pages / prefix_cache_pages need "
+                    "kv_layout='paged' — the dense layout has no page pool")
+            host_pages = prefix_cache_pages = None
+        self.host_pages = host_pages
+        self.prefix_cache_pages = prefix_cache_pages
+
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int64)   # tokens in cache
         self.queue: list[Request] = []
@@ -229,6 +286,17 @@ class ServeEngine:
         self._spec_windows = 0
         self._spec_proposed = 0
         self._spec_accepted = 0
+        # scheduler counters: preempt/resume traffic and undrained runs
+        self._preemptions = 0
+        self._resumes = 0
+        self._offload_bytes = 0
+        self._onload_bytes = 0
+        self._undrained_runs = 0
+        self._submit_seq = 0
+        #: did the last run() drain every request? (satellite of the
+        #: old silent-truncation bug: stopping at max_steps with live
+        #: work now raises under strict=True and flips this flag)
+        self.drained = True
 
         if kv_layout == "paged":
             self._init_paged(page_size, pool_pages, prefill_chunk)
@@ -273,7 +341,9 @@ class ServeEngine:
         # admission backpressure (tests/test_serving.py exercises this)
         self.pool = PagePool(pool_pages
                              or self.batch_slots * self.pages_per_seq,
-                             self.page_size)
+                             self.page_size,
+                             host_pages=self.host_pages,
+                             cache_pages=self.prefix_cache_pages)
         self.prefill_chunk = (prefill_chunk
                               or int(os.environ.get("REPRO_PREFILL_CHUNK",
                                                     0))
@@ -312,6 +382,12 @@ class ServeEngine:
         # so the one compile covers every page pair
         self._copy_page = jax.jit(lm_mod.paged_copy_page,
                                   donate_argnums=(0,))
+        # preemption snapshot/restore: whole-page gather to host and
+        # scatter back. Page-index vectors are traced and pow2-padded, so
+        # O(log pages_per_seq) compiles cover every preemption shape.
+        self._gather_pages = jax.jit(lm_mod.paged_gather_pages)
+        self._scatter_pages = jax.jit(lm_mod.paged_scatter_pages,
+                                      donate_argnums=(0,))
         self.block_tables = np.zeros(
             (self.batch_slots, self.pages_per_seq), np.int32)
         # per-slot prefill progress: tokens of the prompt already fed;
@@ -369,27 +445,60 @@ class ServeEngine:
                        if req.seed is not None
                        else jax.random.fold_in(self._base_key, req.rid))
         req.t_enqueue = time.time()
+        req._seq = self._submit_seq
+        self._submit_seq += 1
         self.queue.append(req)
 
-    def run(self, max_steps: int = 10_000):
-        """Drive until queue + slots drain (or step limit)."""
+    def step(self):
+        """One public scheduling tick: admission (with preemption under
+        the cb scheduler), a prefill chunk per prefilling slot, one decode
+        tick. Callers that interleave ``submit`` with engine progress —
+        arrival processes in benchmarks, the differential storm tests —
+        drive this directly; ``run`` is this in a drain loop."""
+        t0 = time.time()
+        self._tick()
+        self._wall += time.time() - t0
+
+    def _tick(self):
+        self._steps += 1
+        if self.kv_layout == "paged":
+            self._admit_paged()
+            self._prefill_tick()
+            self._decode_step_paged()
+            self._occ_samples.append(self.pool.stats.occupancy)
+        else:
+            self._admit_dense()
+            self._decode_step_dense()
+            self._occ_samples.append(
+                sum(r is not None for r in self.slot_req)
+                / self.batch_slots)
+
+    def run(self, max_steps: int = 10_000, *, strict: bool = True):
+        """Drive until queue + slots drain (or step limit).
+
+        Hitting ``max_steps`` with live requests used to return silently,
+        dropping queued/resident work on the floor. Now it surfaces:
+        ``self.drained`` flips False, the ``undrained_runs`` metric
+        increments, and under ``strict=True`` (the default) a
+        RuntimeError is raised — pass ``strict=False`` to accept the
+        partial ``finished`` list instead."""
         t0 = time.time()
         for _ in range(max_steps):
             if not self.queue and all(r is None for r in self.slot_req):
                 break
-            self._steps += 1
-            if self.kv_layout == "paged":
-                self._admit_paged()
-                self._prefill_tick()
-                self._decode_step_paged()
-                self._occ_samples.append(self.pool.stats.occupancy)
-            else:
-                self._admit_dense()
-                self._decode_step_dense()
-                self._occ_samples.append(
-                    sum(r is not None for r in self.slot_req)
-                    / self.batch_slots)
+            self._tick()
         self._wall += time.time() - t0
+        self.drained = (not self.queue
+                        and all(r is None for r in self.slot_req))
+        if not self.drained:
+            self._undrained_runs += 1
+            if strict:
+                raise RuntimeError(
+                    f"run(max_steps={max_steps}) stopped with live work: "
+                    f"{len(self.queue)} queued, "
+                    f"{sum(r is not None for r in self.slot_req)} resident "
+                    f"({len(self.finished)} finished). Raise max_steps, or "
+                    f"pass strict=False to accept partial progress.")
         return self.finished
 
     def reset_metrics(self):
@@ -405,9 +514,22 @@ class ServeEngine:
         self._spec_windows = 0
         self._spec_proposed = 0
         self._spec_accepted = 0
+        self._preemptions = 0
+        self._resumes = 0
+        self._offload_bytes = 0
+        self._onload_bytes = 0
+        self._undrained_runs = 0
+        self.drained = True
         if self.kv_layout == "paged":
-            self.pool.stats.peak_pages_in_use = self.pool.stats.pages_in_use
-            self.pool.stats.admission_denials = 0
+            st = self.pool.stats
+            st.peak_pages_in_use = st.pages_in_use
+            st.admission_denials = 0
+            st.offload_calls = 0
+            st.onload_calls = 0
+            st.peak_host_pages = st.host_pages_in_use
+            st.prefix_lookups = 0
+            st.prefix_hits = 0
+            st.prefix_evictions = 0
             self._prefix_hits = 0
             self._prefill_skipped = 0
             self._cow_copies = 0
@@ -421,15 +543,34 @@ class ServeEngine:
         per_tok = kv_bytes_per_token(self.cfg, self.kv_cache_dtype,
                                      kv_scheme=self.kv_scheme)
         if self.kv_layout == "paged":
-            peak_kv = (self.pool.stats.peak_pages_in_use * self.page_size
-                       * per_tok)
+            st = self.pool.stats
+            peak_kv = st.peak_pages_in_use * self.page_size * per_tok
+            # offloaded pages carry the same per-token layout on host
+            page_bytes = self.page_size * per_tok
             paged = {"page_size": self.page_size,
                      "n_pages": self.pool.n_pages,
                      "pages_per_seq": self.pages_per_seq,
-                     "peak_kv_pages": self.pool.stats.peak_pages_in_use,
+                     "peak_kv_pages": st.peak_pages_in_use,
                      "admission_denials":
-                         self.pool.stats.admission_denials,
+                         st.admission_denials,
                      "prefill_chunk": self.prefill_chunk,
+                     # continuous-batching scheduler: preempt/resume
+                     # traffic and the two-tier memory picture
+                     "preemptions": self._preemptions,
+                     "resumes": self._resumes,
+                     "offload_bytes": self._offload_bytes,
+                     "onload_bytes": self._onload_bytes,
+                     "host_pages": self.pool.host_pages,
+                     "host_pages_in_use": st.host_pages_in_use,
+                     "peak_host_pages": st.peak_host_pages,
+                     "peak_host_bytes": st.peak_host_pages * page_bytes,
+                     # prefix-cache economics (pool-side counters)
+                     "prefix_cache_pages": self.pool.cache_pages,
+                     "prefix_lookups": st.prefix_lookups,
+                     "prefix_evictions": st.prefix_evictions,
+                     "prefix_hit_rate":
+                         st.prefix_hits / st.prefix_lookups
+                         if st.prefix_lookups else 0.0,
                      "prefix_cache": self.prefix_cache,
                      "prefix_hits": self._prefix_hits,
                      "prefill_tokens_skipped": self._prefill_skipped,
@@ -451,6 +592,9 @@ class ServeEngine:
             paged = {}
         return {
             "kv_layout": self.kv_layout,
+            "scheduler": self.scheduler,
+            "undrained_runs": self._undrained_runs,
+            "drained": self.drained,
             "kv_scheme": self.kv_scheme or "none",
             # what the cache arrays actually hold: the quantized layout
             # ignores kv_cache_dtype (codes are uint8, scales f32)
@@ -504,48 +648,257 @@ class ServeEngine:
         return cand[:-1], cand[-1], len(req.prompt) - 1
 
     def _admit_paged(self):
-        """Admission is page-budget-based: the queue head is admitted when
-        a slot is free AND the pool covers its worst-case token footprint
-        (prompt + max_new, capped at max_seq — reserved up front so decode
-        can never OOM mid-sequence) minus any shared-prefix pages the
-        prefix cache maps in place of fresh ones
-        (``planner.plan_seq_pages``). FIFO: a blocked head blocks the
-        queue (no starvation of long prompts by short ones)."""
+        """Admission is page-budget-based either way: a request enters a
+        slot only when the pool covers its worst-case token footprint
+        (prompt + max_new, capped at max_seq — reserved up front so
+        decode can never OOM mid-sequence) minus any shared-prefix pages
+        the prefix cache maps in place of fresh ones
+        (``planner.plan_seq_pages``). The *policy* differs:
+
+        * ``fifo`` — the original synchronous baseline: strict submit
+          order, a blocked head blocks the queue (no starvation of long
+          prompts by short ones, no preemption).
+        * ``cb`` — continuous batching: candidates are tried in
+          (priority desc, submit order) order, the first that fits is
+          admitted (skip-ahead keeps slots busy), and when nothing fits
+          the top candidate may preempt strictly-lower-priority
+          residents — their written KV pages offload to the host tier
+          and they resume later from the exact write cursor.
+        """
+        if self.scheduler == "cb":
+            self._admit_cb()
+        else:
+            self._admit_fifo()
+
+    def _admit_fifo(self):
         for slot in range(self.batch_slots):
             if not self.queue:
                 return
             if self.slot_req[slot] is not None:
                 continue
-            req = self.queue[0]
-            shared, cow_src, matched = ([], None, 0)
-            if self.prefix_cache:
-                shared, cow_src, matched = self._match_prefix(req)
-            pages = self.pool.allocate(req.rid,
-                                       self._worst_case_tokens(req),
-                                       shared_prefix=shared)
-            if pages is None:
+            if not self._try_admit(self.queue[0], slot):
                 return                      # wait for a release
-            if cow_src is not None:
-                # private copy of the partially-reused last page; the
-                # re-run final token overwrites its own (identical) KV
-                self.caches = self._copy_page(
-                    self.caches, jnp.int32(cow_src),
-                    jnp.int32(pages[len(shared)]))
-                self._cow_copies += 1
-            if matched:
-                self._prefix_hits += 1
-                self._prefill_skipped += matched
-            self.queue.pop(0)
-            self.slot_req[slot] = req
-            self.slot_pos[slot] = matched
-            self._fed[slot] = matched
-            self.block_tables[slot] = self.pool.block_table_row(
-                req.rid, self.pages_per_seq)
-            if self.spec_k:
-                # the drafter indexes the FULL prompt (matched prefix
-                # included) — sharing changes where KV bytes live, not
-                # what n-grams the sequence's history contains
-                self.drafter.start(req.rid, req.prompt)
+
+    def _admit_cb(self):
+        while self.queue:
+            free = [s for s in range(self.batch_slots)
+                    if self.slot_req[s] is None]
+            order = sorted(self.queue,
+                           key=lambda r: (-r.priority, r._seq))
+            admitted = False
+            if free:
+                for req in order:
+                    if self._try_admit(req, free[0]):
+                        admitted = True
+                        break
+            if admitted:
+                continue
+            # nobody fits as-is: preempt on behalf of the top candidate
+            # only (preempting for a skip-ahead candidate could evict
+            # work the top one is about to need), then admit it straight
+            # away — every loop iteration either admits or returns, so
+            # admission can never spin on a preemption that didn't pay
+            if not self._preempt_for(order[0]):
+                return
+            slot = next(s for s in range(self.batch_slots)
+                        if self.slot_req[s] is None)
+            if not self._try_admit(order[0], slot):
+                return
+
+    def _try_admit(self, req: Request, slot: int) -> bool:
+        """Try to place ``req`` into the free ``slot``: fresh admission
+        (prefix-cache matching included) or resume-from-offload when the
+        request carries preemption state. Pops it from the queue and
+        returns True on success; False leaves every piece of state — the
+        queue, the pool, the slot — untouched."""
+        if req._resume is not None:
+            return self._try_resume(req, slot)
+        shared, cow_src, matched = ([], None, 0)
+        if self.prefix_cache:
+            shared, cow_src, matched = self._match_prefix(req)
+        pages = self.pool.allocate(req.rid,
+                                   self._worst_case_tokens(req),
+                                   shared_prefix=shared)
+        if pages is None:
+            return False
+        if cow_src is not None:
+            # private copy of the partially-reused last page; the
+            # re-run final token overwrites its own (identical) KV
+            self.caches = self._copy_page(
+                self.caches, jnp.int32(cow_src),
+                jnp.int32(pages[len(shared)]))
+            self._cow_copies += 1
+        if matched:
+            self._prefix_hits += 1
+            self._prefill_skipped += matched
+        self.queue.remove(req)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = matched
+        self._fed[slot] = matched
+        self.block_tables[slot] = self.pool.block_table_row(
+            req.rid, self.pages_per_seq)
+        if self.spec_k:
+            # the drafter indexes the FULL prompt (matched prefix
+            # included) — sharing changes where KV bytes live, not
+            # what n-grams the sequence's history contains
+            self.drafter.start(req.rid, req.prompt)
+        return True
+
+    # -- preemption + resume (cb scheduler; docs/SERVING.md lifecycle) -------
+
+    def _snapshot_pages(self, pages: tuple[int, ...]):
+        """Gather the written pages' bytes to host (the offload payload).
+        Indices pad to a power of two by repeating the last page so
+        O(log) compiles cover every preemption; the duplicates are
+        sliced off after the device_get."""
+        n = len(pages)
+        n_pad = _pad_pow2(n, self.pages_per_seq)
+        idx = np.full(n_pad, pages[-1], np.int32)
+        idx[:n] = pages
+        snap = jax.device_get(self._gather_pages(self.caches,
+                                                 jnp.asarray(idx)))
+        return jax.tree_util.tree_map(lambda leaf: leaf[:, :n], snap)
+
+    def _restore_pages(self, pages: list[int], payload):
+        """Scatter an offload payload into freshly allocated pages (the
+        first ``n`` of the new reservation, in logical order). Padding
+        duplicates the last (index, payload row) pair, so duplicate
+        scatter writes carry identical bytes — deterministic."""
+        n = jax.tree_util.tree_leaves(payload)[0].shape[1]
+        n_pad = _pad_pow2(n, self.pages_per_seq)
+        idx = np.full(n_pad, pages[n - 1], np.int32)
+        idx[:n] = pages[:n]
+        if n_pad > n:
+            payload = jax.tree_util.tree_map(
+                lambda leaf: np.concatenate(
+                    [leaf, np.repeat(leaf[:, -1:], n_pad - n, axis=1)],
+                    axis=1),
+                payload)
+        self.caches = self._scatter_pages(self.caches, jnp.asarray(idx),
+                                          payload)
+
+    def _preempt_slot(self, slot: int) -> bool:
+        """Evict the resident request: snapshot the pages covering its
+        write cursor, park them (and the bytes) on the pool's host tier,
+        release its device pages ref-aware, and requeue it carrying
+        resume state. Returns False (state untouched) when the host tier
+        cannot take the pages. Everything past the write cursor —
+        unwritten reservation, rejected speculative tails — is garbage
+        that was never attended, so it is deliberately not snapshotted."""
+        req = self.slot_req[slot]
+        n_written = int(self.slot_pos[slot])
+        fed = int(self._fed[slot])
+        _, n_keep = planner.plan_resume_pages(
+            n_written, self._worst_case_tokens(req), self.page_size)
+        payload = (self._snapshot_pages(self.pool.seq_pages(req.rid)[:n_keep])
+                   if n_keep else None)
+        if self.pool.offload(req.rid, n_keep, payload) is None:
+            return False                    # host tier full
+        if payload is not None:
+            self._offload_bytes += sum(
+                leaf.nbytes for leaf in jax.tree_util.tree_leaves(payload))
+        req._resume = (n_written, fed)
+        req.preemptions += 1
+        self._preemptions += 1
+        self.slot_req[slot] = None
+        self.block_tables[slot] = 0
+        self.slot_pos[slot] = 0
+        self._fed[slot] = -1
+        if self.spec_k:
+            # the n-gram index rebuilds deterministically from
+            # prompt + output at resume — nothing to keep
+            self.drafter.drop(req.rid)
+        self.queue.append(req)
+        return True
+
+    def _try_resume(self, req: Request, slot: int) -> bool:
+        """Bring a preempted request back: fresh worst-case reservation
+        (no prefix sharing — the restored bytes are private), scatter the
+        host snapshot into the new pages, and re-enter the tick loop at
+        the exact (write cursor, prefill progress) it was evicted at."""
+        n_written, fed = req._resume
+        res = self.pool.onload(req.rid, self._worst_case_tokens(req))
+        if res is None:
+            return False                    # device pages still short
+        pages, payload = res
+        if payload is not None:
+            self._restore_pages(pages, payload)
+            self._onload_bytes += sum(
+                leaf.nbytes for leaf in jax.tree_util.tree_leaves(payload))
+        self.queue.remove(req)
+        req._resume = None
+        self._resumes += 1
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = n_written
+        self._fed[slot] = fed
+        self.block_tables[slot] = self.pool.block_table_row(
+            req.rid, self.pages_per_seq)
+        if self.spec_k:
+            # deterministic rebuild: the incremental index over
+            # prompt + emitted output is a pure function of both
+            self.drafter.start(req.rid, req.prompt)
+            for tok in req.output:
+                self.drafter.extend(req.rid, int(tok))
+        return True
+
+    def _preempt_for(self, cand: Request) -> bool:
+        """Preempt strictly-lower-priority residents until ``cand`` has a
+        slot and enough free pages, lowest priority first (youngest
+        breaking ties — they lose the least progress). Prechecked against
+        both tiers before any eviction: the chosen victims' releasable
+        pages (shared pages with other owners free nothing) must cover
+        the candidate's worst-case need, and the host tier must have room
+        for every victim's written pages — a half-done preemption wave
+        would evict work without admitting anyone. Equal priorities never
+        preempt: that is what keeps cb admission FIFO-compatible (and
+        livelock-free — the highest-priority resident always runs)."""
+        need = planner.plan_seq_pages(self._worst_case_tokens(cand),
+                                      self.page_size)
+        victims = sorted(
+            (s for s, r in enumerate(self.slot_req)
+             if r is not None and r.priority < cand.priority),
+            key=lambda s: (self.slot_req[s].priority,
+                           -self.slot_req[s]._seq))
+        free_slot = any(r is None for r in self.slot_req)
+        gain = self.pool.free_pages()
+        host_extra = 0
+        chosen: list[int] = []
+        for s in victims:
+            if gain >= need and (free_slot or chosen):
+                break
+            _, n_keep = planner.plan_resume_pages(
+                int(self.slot_pos[s]),
+                self._worst_case_tokens(self.slot_req[s]), self.page_size)
+            if (self.pool.host_pages is not None
+                    and self.pool.stats.host_pages_in_use + host_extra
+                    + n_keep > self.pool.host_pages):
+                continue                    # host tier can't take this one
+            chosen.append(s)
+            gain += self.pool.releasable_pages(self.slot_req[s].rid)
+            host_extra += n_keep
+        if gain < need or not (free_slot or chosen):
+            return False
+        preempted = False
+        for s in chosen:
+            preempted |= self._preempt_slot(s)
+        return preempted
+
+    def preempt(self, rid: int):
+        """Force-preempt a resident request (fault injection / tests —
+        the cb scheduler calls ``_preempt_for`` itself). Raises KeyError
+        when ``rid`` is not resident, RuntimeError when the host tier
+        cannot take its pages."""
+        if self.kv_layout != "paged":
+            raise ValueError("preempt() needs kv_layout='paged'")
+        for slot, r in enumerate(self.slot_req):
+            if r is not None and r.rid == rid:
+                if not self._preempt_slot(slot):
+                    raise RuntimeError(
+                        f"request {rid}: host tier full "
+                        f"({self.pool.stats.host_pages_in_use}/"
+                        f"{self.pool.host_pages} pages)")
+                return
+        raise KeyError(f"request {rid} is not resident in any slot")
 
     def _prefill_tick(self):
         """Advance every prefilling slot by one prompt chunk in a single

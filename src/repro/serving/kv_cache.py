@@ -23,6 +23,19 @@ the **host-side** allocator that maps sequences onto pages:
   * admission asks ``can_admit(n_tokens)`` — a request whose worst-case
     footprint exceeds the currently free pages stays queued instead of
     crashing or evicting others
+  * the pool is **two-tier**: a preempted sequence's written pages can be
+    ``offload``-ed to a host-memory tier (the engine snapshots the device
+    bytes and hands them over as an opaque payload; the device pages are
+    released ref-aware) and later ``onload``-ed back into freshly
+    allocated device pages — the accounting here guarantees no double
+    offload and exact free-list recovery, the engine guarantees the
+    restored bytes are the written bytes
+  * the prefix index is optionally **capacity-bounded**
+    (``cache_pages=``): cached-free pages (refcount zero but still
+    indexed) beyond the bound are evicted least-recently-used first, and
+    fresh allocations prefer un-indexed free pages so a hot cached prefix
+    is the last thing recycled (ref-aware eviction). Lookup/hit/eviction
+    counters live in ``PoolStats``.
 
 The *device* side consumes only the ``block_table`` this produces: an
 ``(n_seqs, pages_per_seq)`` int32 array of physical page indices that the
@@ -103,6 +116,15 @@ class PoolStats:
     release_calls: int = 0
     admission_denials: int = 0      # distinct sequences denied, not ticks
     prefix_pages_shared: int = 0    # cumulative refcount bumps from sharing
+    # host tier (preemption offload)
+    host_pages_in_use: int = 0      # pages of offloaded KV held on host
+    peak_host_pages: int = 0
+    offload_calls: int = 0
+    onload_calls: int = 0
+    # prefix-cache economics
+    prefix_lookups: int = 0         # match_prefix calls
+    prefix_hits: int = 0            # ... that returned >= 1 page
+    prefix_evictions: int = 0       # index entries dropped (LRU + reuse)
 
     @property
     def occupancy(self) -> float:
@@ -127,21 +149,41 @@ class PagePool:
     refcounts, sequence maps, prefix index and stats exactly as they were
     before the call. Validation runs before the first pop, so a partial
     allocation can never leak pages (regression-tested).
+
+    ``host_pages`` bounds the host tier (pages of offloaded KV that may
+    sit in host memory at once; None = unbounded). ``cache_pages`` bounds
+    the prefix cache (cached-free indexed pages; None = the original lazy
+    policy: entries survive until the page is physically reused).
     """
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int, *,
+                 host_pages: int | None = None,
+                 cache_pages: int | None = None):
         if n_pages <= 0 or page_size <= 0:
             raise ValueError((n_pages, page_size))
+        if host_pages is not None and host_pages < 0:
+            raise ValueError(f"host_pages must be >= 0, got {host_pages}")
+        if cache_pages is not None and cache_pages < 0:
+            raise ValueError(f"cache_pages must be >= 0, got {cache_pages}")
         self.n_pages = n_pages
         self.page_size = page_size
+        self.host_pages = host_pages
+        self.cache_pages = cache_pages
         self._free: list[int] = list(range(n_pages - 1, -1, -1))
         self._ref: list[int] = [0] * n_pages
         self._seq_pages: dict[int, list[int]] = {}
+        # host tier: seq -> (pages of KV parked on host, opaque payload —
+        # the engine stores the snapshotted device bytes here)
+        self._host_seqs: dict[int, tuple[int, object]] = {}
         # prefix index: chain hash of a page-aligned token prefix -> the
         # physical page holding its last block. _page_key is the inverse
         # (a page carries at most one index entry) so eviction is O(1).
         self._index: dict[bytes, int] = {}
         self._page_key: dict[int, bytes] = {}
+        # LRU clock for cached prefixes: page -> last-touched tick
+        # (touched on register / match / share / revive)
+        self._tick = 0
+        self._touched: dict[int, int] = {}
         self._denied: set[int] = set()
         self.stats = PoolStats(n_pages, page_size)
 
@@ -215,6 +257,12 @@ class PagePool:
             if page is None:
                 break
             pages.append(page)
+        self.stats.prefix_lookups += 1
+        if pages:
+            self.stats.prefix_hits += 1
+            self._tick += 1
+            for p in pages:
+                self._touched[p] = self._tick
         return pages
 
     def register_prefix(self, seq_id: int, tokens,
@@ -233,18 +281,50 @@ class PagePool:
         n_full = n // self.page_size
         if keys is None:
             keys = self._page_keys(tokens, n_full)
+        self._tick += 1
         for k, key in enumerate(keys[:n_full]):
-            if key in self._index or pages[k] in self._page_key:
+            page = pages[k]
+            if key in self._index or page in self._page_key:
+                if page in self._page_key:
+                    self._touched[page] = self._tick
                 continue
-            self._index[key] = pages[k]
-            self._page_key[pages[k]] = key
+            self._index[key] = page
+            self._page_key[page] = key
+            self._touched[page] = self._tick
 
     def _evict(self, page: int):
         """Drop the page's prefix-index entry (it is about to be rewritten
-        by a fresh owner)."""
+        by a fresh owner, or LRU-evicted past ``cache_pages``)."""
         key = self._page_key.pop(page, None)
         if key is not None:
             del self._index[key]
+            self._touched.pop(page, None)
+            self.stats.prefix_evictions += 1
+
+    def _pop_fresh(self) -> int:
+        """Pop a free page for a fresh allocation, preferring un-indexed
+        pages (LIFO among those) so hot cached prefixes are the last thing
+        recycled; when every free page carries a cached prefix, recycle
+        the least-recently-touched one."""
+        for i in range(len(self._free) - 1, -1, -1):
+            if self._free[i] not in self._page_key:
+                return self._free.pop(i)
+        i = min(range(len(self._free)),
+                key=lambda j: self._touched.get(self._free[j], 0))
+        return self._free.pop(i)
+
+    def _enforce_cache_capacity(self):
+        """Evict cached-free prefix pages (refcount zero but still
+        indexed) past the ``cache_pages`` bound, coldest first. Pages
+        pinned by live owners never count against the bound — their index
+        entries are free to keep (ref-aware)."""
+        if self.cache_pages is None:
+            return
+        cached = [p for p in self._page_key if self._ref[p] == 0]
+        while len(cached) > self.cache_pages:
+            victim = min(cached, key=lambda p: self._touched.get(p, 0))
+            self._evict(victim)
+            cached.remove(victim)
 
     # -- mutation ------------------------------------------------------------
 
@@ -297,12 +377,15 @@ class PagePool:
         self._denied.discard(seq_id)
         for p in revive:
             self._free.remove(p)
-        fresh = [self._free.pop() for _ in range(n_fresh)]
+        fresh = [self._pop_fresh() for _ in range(n_fresh)]
         for p in fresh:
             self._evict(p)              # content dies with the new owner
             self._ref[p] = 1
+        self._tick += 1
         for p in shared:
             self._ref[p] += 1
+            if p in self._page_key:
+                self._touched[p] = self._tick
         pages = shared + fresh
         self._seq_pages[seq_id] = pages
         self.stats.pages_in_use += n_fresh + len(revive)
@@ -339,7 +422,88 @@ class PagePool:
                 freed += 1
         self.stats.pages_in_use -= freed
         self.stats.release_calls += 1
+        self._enforce_cache_capacity()
         return freed
+
+    # -- host tier (preemption offload) --------------------------------------
+
+    def can_offload(self, n_pages: int) -> bool:
+        """Would the host tier accept ``n_pages`` more pages right now?"""
+        if self.host_pages is None:
+            return True
+        return self.stats.host_pages_in_use + n_pages <= self.host_pages
+
+    def releasable_pages(self, seq_id: int) -> int:
+        """Device pages an offload of this sequence would actually free:
+        owned pages whose only reference is this sequence (shared prefix
+        pages stay resident for their other owners)."""
+        return sum(1 for p in self._seq_pages.get(seq_id, ())
+                   if self._ref[p] == 1)
+
+    def host_resident(self, seq_id: int) -> bool:
+        return seq_id in self._host_seqs
+
+    def host_payload_pages(self, seq_id: int) -> int:
+        """Host pages the offloaded sequence occupies (0 if not parked)."""
+        return self._host_seqs.get(seq_id, (0, None))[0]
+
+    def offload(self, seq_id: int, n_host_pages: int,
+                payload=None) -> int | None:
+        """Park a live sequence's KV on the host tier: drop its device
+        references ref-aware (exactly like ``release`` — shared pages
+        survive for their other owners) and record ``n_host_pages`` of
+        host occupancy plus an opaque ``payload`` (the engine passes the
+        snapshotted page bytes; the pool never inspects it).
+
+        Returns the number of device pages actually freed, or None when
+        the host tier is full (``host_pages`` bound) — the sequence stays
+        live on device, state untouched. Double offload and offload of a
+        non-live sequence raise ``KeyError`` (scheduler bugs)."""
+        if seq_id in self._host_seqs:
+            raise KeyError(f"seq {seq_id}: already offloaded "
+                           f"(double offload)")
+        if seq_id not in self._seq_pages:
+            raise KeyError(f"seq {seq_id}: not live, cannot offload")
+        if not 0 <= n_host_pages <= len(self._seq_pages[seq_id]):
+            raise ValueError(
+                f"seq {seq_id}: n_host_pages {n_host_pages} outside "
+                f"[0, {len(self._seq_pages[seq_id])}]")
+        if not self.can_offload(n_host_pages):
+            return None
+        pages = self._seq_pages.pop(seq_id)
+        freed = 0
+        for p in reversed(pages):       # LIFO, same policy as release
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+                freed += 1
+        self.stats.pages_in_use -= freed
+        self._host_seqs[seq_id] = (n_host_pages, payload)
+        self.stats.offload_calls += 1
+        self.stats.host_pages_in_use += n_host_pages
+        self.stats.peak_host_pages = max(self.stats.peak_host_pages,
+                                         self.stats.host_pages_in_use)
+        self._enforce_cache_capacity()
+        return freed
+
+    def onload(self, seq_id: int, n_tokens: int):
+        """Bring an offloaded sequence back onto the device: allocate a
+        fresh worst-case ``n_tokens`` reservation (no prefix sharing —
+        the restored bytes are private) and hand back
+        ``(pages, payload)`` so the engine can scatter the snapshotted
+        bytes into the new pages. Returns None on device-capacity denial
+        — the sequence stays parked on host, accounting untouched (the
+        denial is counted once per sequence, like ``allocate``)."""
+        if seq_id not in self._host_seqs:
+            raise KeyError(f"seq {seq_id}: not offloaded, cannot onload")
+        n_host, payload = self._host_seqs[seq_id]
+        pages = self.allocate(seq_id, n_tokens)
+        if pages is None:
+            return None
+        del self._host_seqs[seq_id]
+        self.stats.onload_calls += 1
+        self.stats.host_pages_in_use -= n_host
+        return pages, payload
 
     def block_table_row(self, seq_id: int, width: int) -> np.ndarray:
         """(width,) int32 physical-page row for the device block table.
@@ -380,3 +544,22 @@ class PagePool:
             assert self._page_key.get(p) == key, "index/inverse mismatch"
         for p, key in self._page_key.items():
             assert self._index.get(key) == p, "inverse/index mismatch"
+        assert set(self._touched) <= set(self._page_key), \
+            "LRU clock entry for an un-indexed page"
+        # host tier: a sequence lives on exactly one tier, occupancy is the
+        # sum of its entries and stays under the bound
+        assert not (set(self._host_seqs) & set(self._seq_pages)), \
+            "sequence live on device and host at once"
+        assert self.stats.host_pages_in_use == \
+            sum(n for n, _ in self._host_seqs.values()), \
+            "host occupancy out of sync"
+        assert self.stats.host_pages_in_use <= self.stats.peak_host_pages \
+            or self.stats.peak_host_pages == 0
+        if self.host_pages is not None:
+            assert self.stats.host_pages_in_use <= self.host_pages, \
+                "host tier over capacity"
+        if self.cache_pages is not None:
+            cached_free = sum(1 for p in self._page_key
+                              if self._ref[p] == 0)
+            assert cached_free <= self.cache_pages, \
+                f"{cached_free} cached-free pages > bound {self.cache_pages}"

@@ -191,6 +191,168 @@ def test_pool_invariants_randomized():
             "randomized driver never exercised sharing"
 
 
+def test_pool_two_tier_invariants_randomized():
+    """Extend the seeded invariant storm to the two-tier (device + host)
+    pool: interleaved allocate/offload/onload/release sequences must keep
+    byte payloads conserved across tiers (onload returns exactly the
+    bytes offload parked), host occupancy == the sum of parked entries,
+    the free list exact after every onload, no double offload, and
+    validate() green after every op. Seeded — failures reproduce."""
+    rng = np.random.default_rng(1)
+    for n_pages, ps, host in ((8, 4, None), (16, 8, 6), (6, 4, 3)):
+        pool = PagePool(n_pages, ps, host_pages=host)
+        live: dict[int, int] = {}           # sid -> n_total tokens
+        parked: dict[int, tuple] = {}       # sid -> (n_total, n_keep, bytes)
+        next_id = 0
+        for _ in range(400):
+            op = rng.random()
+            if op < 0.35:
+                n_total = int(rng.integers(1, 3 * ps))
+                if pool.allocate(next_id, n_total) is not None:
+                    live[next_id] = n_total
+                next_id += 1
+            elif op < 0.55 and live:
+                sid = int(rng.choice(list(live)))
+                n_keep = int(rng.integers(0, pool.seq_page_count(sid) + 1))
+                payload = rng.integers(0, 256, 16).astype(np.uint8)
+                free_before = pool.free_pages()
+                releasable = pool.releasable_pages(sid)
+                if pool.offload(sid, n_keep, payload.copy()) is None:
+                    # denial only ever means the host bound, and it is
+                    # side-effect free
+                    assert host is not None
+                    assert pool.stats.host_pages_in_use + n_keep > host
+                    assert pool.free_pages() == free_before
+                else:
+                    assert pool.free_pages() == free_before + releasable
+                    parked[sid] = (live.pop(sid), n_keep, payload)
+                    with pytest.raises(KeyError, match="offload"):
+                        pool.offload(sid, 0)        # no double offload
+            elif op < 0.75 and parked:
+                sid = int(rng.choice(list(parked)))
+                n_total, n_keep, payload = parked[sid]
+                res = pool.onload(sid, n_total)
+                if res is not None:
+                    pages, got = res
+                    assert np.array_equal(got, payload), \
+                        "payload bytes not conserved across tiers"
+                    assert len(pages) == pool.pages_for(n_total)
+                    live[sid] = n_total
+                    del parked[sid]
+            elif live:
+                sid = int(rng.choice(list(live)))
+                pool.release(sid)
+                del live[sid]
+            pool.validate()
+            assert pool.stats.host_pages_in_use == \
+                sum(k for _, k, _ in parked.values())
+            assert pool.free_pages() + pool.stats.pages_in_use == n_pages
+        assert pool.stats.offload_calls > 0 and pool.stats.onload_calls > 0
+
+
+def test_offload_onload_errors_and_free_list_exactness():
+    pool = PagePool(6, 4, host_pages=2)
+    with pytest.raises(KeyError, match="not live"):
+        pool.offload(0, 1)
+    with pytest.raises(KeyError, match="not offloaded"):
+        pool.onload(0, 8)
+    pages0 = pool.allocate(0, 8)                    # 2 pages
+    with pytest.raises(ValueError, match="n_host_pages"):
+        pool.offload(0, 3)                          # owns only 2
+    assert pool.offload(0, 2, "blob") == 2
+    assert pool.host_resident(0) and pool.host_payload_pages(0) == 2
+    assert pool.free_pages() == 6
+    with pytest.raises(KeyError, match="double offload"):
+        pool.offload(0, 1)
+    # host tier full: denial, victim stays live
+    pool.allocate(1, 8)
+    assert pool.offload(1, 2) is None
+    assert pool.seq_pages(1) and not pool.host_resident(1)
+    # onload restores the payload and the free list exactly
+    pages, payload = pool.onload(0, 8)
+    assert payload == "blob" and len(pages) == 2
+    assert pool.free_pages() == 6 - 2 - 2
+    assert not pool.host_resident(0)
+    with pytest.raises(KeyError, match="not offloaded"):
+        pool.onload(0, 8)
+    pool.validate()
+    # shared pages survive a co-owner's offload (ref-aware release)
+    t = np.arange(4, dtype=np.int32)
+    pool.register_prefix(0, t)
+    shared = pool.match_prefix(np.concatenate([t, [9]]).astype(np.int32))
+    pool.allocate(2, 5, shared_prefix=shared)
+    assert pool.ref_count(shared[0]) == 2
+    assert pool.offload(0, 2) == 1                  # shared page stays
+    assert pool.ref_count(shared[0]) == 1
+    pool.validate()
+    del pages0
+
+
+def test_prefix_cache_capacity_lru_eviction():
+    """cache_pages bounds the cached-free index: past it, the
+    least-recently-touched entry is evicted (and counted); pages pinned
+    by live owners never count against the bound."""
+    pool = PagePool(8, 4, cache_pages=2)
+    prompts = [np.arange(10 * i, 10 * i + 4, dtype=np.int32)
+               for i in range(3)]
+    for sid, t in enumerate(prompts):
+        pool.allocate(sid, 4)
+        pool.register_prefix(sid, t)
+    # three live indexed pages: fine, the bound counts cached-FREE only
+    assert pool.cached_prefix_pages() == 3
+    pool.validate()
+    pool.release(0)
+    pool.release(1)
+    assert pool.stats.prefix_evictions == 0
+    pool.release(2)                     # third cached-free page: evict LRU
+    assert pool.stats.prefix_evictions == 1
+    assert pool.match_prefix(prompts[0]) == []      # oldest touch evicted
+    assert len(pool.match_prefix(prompts[1])) == 1
+    assert len(pool.match_prefix(prompts[2])) == 1
+    pool.validate()
+    # the matches above touched prompts[1] then prompts[2]: registering a
+    # third cached-free entry evicts prompts[1], the oldest touch
+    pool.allocate(3, 4)
+    pool.register_prefix(3, prompts[0])
+    pool.release(3)
+    assert pool.stats.prefix_evictions == 2
+    assert pool.match_prefix(prompts[1]) == []      # oldest touch evicted
+    assert len(pool.match_prefix(prompts[2])) == 1
+    pool.validate()
+
+
+def test_fresh_allocations_prefer_unindexed_pages():
+    """A cached prefix must be the LAST thing a fresh allocation
+    recycles: free un-indexed pages go first."""
+    pool = PagePool(4, 4)
+    t = np.arange(4, dtype=np.int32)
+    pool.allocate(0, 4)
+    pool.register_prefix(0, t)
+    cached = pool.seq_pages(0)[0]
+    pool.release(0)                     # cached-free now
+    pages = pool.allocate(1, 12)        # 3 of 4 pages fresh
+    assert cached not in pages, "fresh alloc recycled the cached prefix"
+    assert len(pool.match_prefix(t)) == 1
+    # only when every free page is indexed does the LRU one recycle
+    pages2 = pool.allocate(2, 4)
+    assert pages2 == [cached]
+    assert pool.match_prefix(t) == []   # evicted with the reuse
+    assert pool.stats.prefix_evictions >= 1
+    pool.validate()
+
+
+def test_prefix_lookup_hit_counters():
+    pool = PagePool(4, 4)
+    t = np.arange(8, dtype=np.int32)
+    pool.allocate(0, 8)
+    assert pool.match_prefix(t) == []               # miss
+    pool.register_prefix(0, t)
+    assert len(pool.match_prefix(t)) == 2           # hit
+    assert pool.stats.prefix_lookups == 2
+    assert pool.stats.prefix_hits == 1
+    pool.validate()
+
+
 def test_plan_seq_pages_model():
     assert planner.plan_seq_pages(33, 8) == 5
     assert planner.plan_seq_pages(33, 8, shared_tokens=24) == 2
