@@ -34,6 +34,15 @@ bit-identical to the FIFO baseline (CPU; reported elsewhere). The
 `preemptions` / `offload_bytes` / `prefix_evictions` totals are copied
 to the top level of BENCH_serving.json for the CI checks job.
 
+A fifth scenario is the unified-state-cache architecture matrix: an SSM
+(xlstm-350m), a hybrid (jamba-1.5-large-398b), an encoder-decoder
+(whisper-small) and an M-RoPE VLM decoder (qwen2-vl-2b), each reduced,
+served dense+fifo vs paged+cb. Asserted: greedy outputs bit-identical
+per request (CPU), paged peak_state_bytes strictly below dense for the
+SSM/hybrid/enc-dec rows, and whisper's shared input frames hitting the
+refcounted cross-KV region (cross_hits > 0). Per-arch results land in
+BENCH_serving.json["arch_matrix"] for the CI checks job.
+
 Standalone:  PYTHONPATH=src python -m benchmarks.serving_bench
 From run.py: writes BENCH_serving.json at the repo root.
 """
@@ -169,6 +178,9 @@ def run(csv_rows, *, requests: int = 10, slots: int = 4, max_seq: int = 64,
     # summed across the plain and SPx cb axes of the bursty scenario
     for k in ("preemptions", "offload_bytes", "prefix_evictions"):
         result[k] = bursty[k]
+    # unified-state-cache acceptance: every architecture family serves
+    # paged (CI asserts the four per-arch keys exist in the artifact)
+    result["arch_matrix"] = _arch_matrix_scenario(csv_rows, rt)
 
     with open(out_path, "w") as fh:
         json.dump(result, fh, indent=2, sort_keys=True)
@@ -431,6 +443,97 @@ def _bursty_scenario(csv_rows, params, cfg, rt, *, seed: int = 3) -> dict:
                          cb["preemptions"]))
         csv_rows.append((f"serving/bursty_{axis}_offload_kib", 0.0,
                          cb["offload_bytes"] / 2**10))
+    return report
+
+
+def _arch_matrix_scenario(csv_rows, rt, *, slots: int = 4,
+                          max_seq: int = 64, new_tokens: int = 8,
+                          seed: int = 3) -> dict:
+    """Architecture matrix for the unified state cache: one SSM
+    (xlstm-350m), one hybrid (jamba-1.5-large-398b), one enc-dec
+    (whisper-small) and one M-RoPE VLM decoder (qwen2-vl-2b) — each at
+    reduced scale — served dense+fifo vs paged+cb on the same weights
+    and requests (3 requests through 4 slots; the whisper requests
+    include two sharing identical input frames, so the encoder output
+    is computed once and its cross entry refcount-shared).
+
+    Asserted on CPU, where greedy argmaxes are deterministic across
+    batch compositions: per-request greedy outputs bit-identical paged
+    vs dense for every architecture. Asserted on any backend
+    (accounting claims): paged peak_state_bytes strictly below the
+    dense baseline for the SSM, hybrid and enc-dec rows — dense bills
+    every batch slot's worst case (full-length KV + slab + cross) while
+    the state cache bills only live sequences — and whisper records
+    cross_hits > 0 for the shared frames. The per-arch keys in
+    BENCH_serving.json["arch_matrix"] are what the CI checks job
+    asserts on."""
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import encdec as encdec_mod
+    from repro.models import lm as lm_mod
+    from repro.serving.engine import Request, ServeEngine
+
+    def build(arch):
+        if arch == "whisper-small":
+            cfg = reduced(get_config("whisper-small"))
+            params = encdec_mod.encdec_init(jax.random.PRNGKey(2), cfg)
+            fr = np.asarray(jax.random.normal(
+                jax.random.PRNGKey(seed),
+                (2, cfg.enc_seq_len, cfg.d_model)))
+            return cfg, params, [fr[0], fr[0], fr[1]]  # 0 and 1 share
+        n_layers = {"xlstm-350m": 4, "jamba-1.5-large-398b": 8,
+                    "qwen2-vl-2b": 2}[arch]
+        cfg = reduced(get_config(arch), n_layers=n_layers)
+        return cfg, lm_mod.lm_init(jax.random.PRNGKey(1), cfg), None
+
+    report: dict = {"config": {"batch_slots": slots, "max_seq": max_seq,
+                               "new_tokens": new_tokens, "requests": 3}}
+    print("\n== serving: architecture matrix, dense+fifo vs paged+cb ==")
+    for arch in ("xlstm-350m", "jamba-1.5-large-398b", "whisper-small",
+                 "qwen2-vl-2b"):
+        cfg, params, frames = build(arch)
+        rng = np.random.default_rng(seed)
+        prompts = [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+                   for n in (7, 19, 12)]
+        outs, mets = {}, {}
+        for layout, sched in (("dense", "fifo"), ("paged", "cb")):
+            eng = ServeEngine(params, cfg, batch_slots=slots,
+                              max_seq=max_seq, quantize=None, rt=rt,
+                              kv_layout=layout, scheduler=sched)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(
+                    rid=i, prompt=p, max_new_tokens=new_tokens,
+                    frames=None if frames is None else frames[i]))
+            eng.run(max_steps=2000)
+            assert eng.drained
+            outs[layout] = {r.rid: r.output for r in eng.finished}
+            mets[layout] = eng.metrics()
+        mp, md = mets["paged"], mets["dense"]
+        agree = outs["paged"] == outs["dense"]
+        if jax.default_backend() == "cpu":
+            assert agree, f"{arch}: paged+cb changed greedy outputs"
+        elif not agree:
+            print(f"  WARNING: {arch} paged vs dense outputs differ "
+                  "(near-tie flips across layouts — not asserted off "
+                  "CPU)")
+        if arch != "qwen2-vl-2b":
+            # the memory claim for SSM/hybrid/enc-dec state: 3 live
+            # requests vs 4 always-billed dense slots
+            assert mp["peak_state_bytes"] < md["peak_state_bytes"], \
+                (arch, mp["peak_state_bytes"], md["peak_state_bytes"])
+        if frames is not None:
+            assert mp["cross_hits"] > 0, "shared frames never reused"
+            assert mp["peak_cross"] == 2, mp["peak_cross"]
+        ratio = md["peak_state_bytes"] / max(mp["peak_state_bytes"], 1)
+        print(f"  {arch:22s}: agree {int(agree)}  peak state "
+              f"{mp['peak_state_bytes']:8d} B paged vs "
+              f"{md['peak_state_bytes']:8d} B dense ({ratio:.2f}x)")
+        report[arch] = {"greedy_agreement": float(agree),
+                        "state_bytes_ratio_dense_over_paged": ratio,
+                        "dense": md, "paged": mp}
+        csv_rows.append((f"serving/arch_{arch}_state_ratio", 0.0, ratio))
+        csv_rows.append((f"serving/arch_{arch}_greedy_agreement", 0.0,
+                         float(agree)))
     return report
 
 

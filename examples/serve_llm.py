@@ -4,6 +4,15 @@ serve a batch of requests through the engine — comparing dense vs quantized
 weights AND dense vs paged KV layouts (throughput, occupancy, agreement).
 
   PYTHONPATH=src python examples/serve_llm.py
+  PYTHONPATH=src python examples/serve_llm.py --arch xlstm-350m
+
+--arch accepts any bundled config. Every family serves paged through the
+unified state cache (docs/SERVING.md); the example runs the feature axes
+the architecture's layer pattern supports — prefix cache and speculative
+decoding are attention-pattern features, so an SSM/hybrid arch compares
+the weight and KV-layout axes only, and an enc-dec arch (whisper-small,
+served on synthetic input frames, no train loop) adds the speculation
+axis back.
 """
 import argparse
 import time
@@ -13,6 +22,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.data.tokens import TokenStream
+from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime
 from repro.serving.engine import Request, ServeEngine
@@ -21,23 +31,42 @@ from repro.training import TrainConfig, TrainLoop, make_optimizer
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b",
+                    help="any bundled config (SSM/hybrid/enc-dec/M-RoPE "
+                         "included — each runs the axes its layer "
+                         "pattern supports)")
     ap.add_argument("--train-steps", type=int, default=40)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=12)
     args = ap.parse_args(argv)
 
-    cfg = reduced(get_config("gemma-2b"), d_model=128, vocab=512)
+    cfg = get_config(args.arch)
+    cfg = (reduced(cfg, d_model=128, vocab=512)
+           if args.arch == "gemma-2b" else reduced(cfg))
     rt = Runtime(impl="auto", q_chunk=64)
+    mixers = {s.split("+")[0] for s in cfg.pattern}
+    recurrent = bool(mixers & {"mamba", "mlstm", "slstm"})
 
-    # brief training so serving runs on learned weights
-    data = TokenStream(cfg.vocab_size, 8, 64, seed=0)
-    tc = TrainConfig(max_steps=args.train_steps, log_every=20)
-    loop = TrainLoop(lambda p, b: lm_mod.lm_loss(p, b, cfg, rt),
-                     make_optimizer("adamw", lr=3e-3),
-                     lambda: lm_mod.lm_init(jax.random.PRNGKey(0), cfg),
-                     iter(data), tc)
-    params, _ = loop.run()
-    data.close()
+    if cfg.enc_dec:
+        # enc-dec: random-init weights, synthetic input frames (two
+        # distinct inputs alternate, so the shared cross-KV region of
+        # the state cache sees encoder-pass reuse)
+        params = encdec_mod.encdec_init(jax.random.PRNGKey(0), cfg)
+        frame_sets = np.random.default_rng(1).standard_normal(
+            (2, cfg.enc_seq_len, cfg.d_model)).astype(np.float32)
+    else:
+        # brief training so serving runs on learned weights (the LM
+        # assembly covers dense/MoE/SSM/hybrid/M-RoPE patterns alike)
+        frame_sets = None
+        data = TokenStream(cfg.vocab_size, 8, 64, seed=0)
+        tc = TrainConfig(max_steps=args.train_steps, log_every=20)
+        loop = TrainLoop(lambda p, b: lm_mod.lm_loss(p, b, cfg, rt),
+                         make_optimizer("adamw", lr=3e-3),
+                         lambda: lm_mod.lm_init(jax.random.PRNGKey(0),
+                                                cfg),
+                         iter(data), tc)
+        params, _ = loop.run()
+        data.close()
 
     rng = np.random.default_rng(0)
     # every request opens with the same 16-token system prompt — the
@@ -49,17 +78,23 @@ def main(argv=None):
                       int(rng.integers(4, 16))).astype(np.int32)])
         for _ in range(args.requests)]
 
-    results = {}
     # axes: weights (dense vs sp2_4) x KV (dense slots, paged, paged +
     # SPx-quantized codes+scale pages — docs/QUANTIZATION.md) x shared
-    # prefix pages x prompt-lookup speculative decoding (docs/SERVING.md)
-    for scheme, layout, kvq, share, spec in (
-            (None, "dense", False, False, False),
+    # prefix pages x prompt-lookup speculative decoding (docs/SERVING.md).
+    # Pattern-gated features are left off the matrix where the engine
+    # would reject them (recurrent slabs cannot prefix-share or roll
+    # back drafts; enc-dec decoder KV depends on the encoder output).
+    axes = [(None, "dense", False, False, False),
             ("sp2_4", "dense", False, False, False),
-            ("sp2_4", "paged", False, False, False),
-            ("sp2_4", "paged", True, False, False),
-            ("sp2_4", "paged", False, True, False),
-            ("sp2_4", "paged", False, False, True)):
+            ("sp2_4", "paged", False, False, False)]
+    if not (recurrent or cfg.enc_dec):
+        axes += [("sp2_4", "paged", True, False, False),
+                 ("sp2_4", "paged", False, True, False)]
+    if not recurrent:
+        axes += [("sp2_4", "paged", False, False, True)]
+
+    results = {}
+    for scheme, layout, kvq, share, spec in axes:
         tag = (f"{scheme or 'dense'}/{layout}{'+kvq' if kvq else ''}"
                f"{'+share' if share else ''}{'+spec' if spec else ''}")
         ert = rt.replace(kv_quant=True, kv_scheme="spx_8_x3") if kvq else rt
@@ -71,7 +106,9 @@ def main(argv=None):
         t0 = time.time()
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p,
-                               max_new_tokens=args.new_tokens))
+                               max_new_tokens=args.new_tokens,
+                               frames=(None if frame_sets is None
+                                       else frame_sets[i % 2])))
         done = eng.run()
         dt = time.time() - t0
         n_tok = sum(len(r.output) for r in done)
@@ -90,37 +127,35 @@ def main(argv=None):
               f"({n_tok / dt:.0f} tok/s) peak KV "
               f"{m['peak_kv_bytes'] / 2**10:.0f} KiB{extra}")
 
-    # agreement between dense and 4-bit serving (weights axis)
-    agree_q = np.mean([
-        np.mean(np.array(results["dense/dense"][i])
-                == np.array(results["sp2_4/dense"][i]))
-        for i in range(args.requests)])
-    # agreement between dense-slot and paged KV (layout axis; exact)
-    agree_p = np.mean([
-        results["sp2_4/dense"][i] == results["sp2_4/paged"][i]
-        for i in range(args.requests)])
-    # agreement of SPx-quantized KV pages vs the f32 pages (token-level)
-    agree_kvq = np.mean([
-        np.mean(np.array(results["sp2_4/paged"][i])
-                == np.array(results["sp2_4/paged+kvq"][i]))
-        for i in range(args.requests)])
-    # shared prefix pages vs private pages (layout-internal axis; exact)
-    agree_share = np.mean([
-        results["sp2_4/paged"][i] == results["sp2_4/paged+share"][i]
-        for i in range(args.requests)])
-    # speculative decoding vs plain decode (scheduling axis; exact)
-    agree_spec = np.mean([
-        results["sp2_4/paged"][i] == results["sp2_4/paged+spec"][i]
-        for i in range(args.requests)])
-    print(f"[serve_llm] dense vs sp2_4 greedy-token agreement: {agree_q:.2f}")
+    # agreements, whichever axes ran: lossy comparisons (the weights
+    # axis, SPx-quantized KV pages) report token-level agreement; every
+    # same-weights axis (layout, sharing, speculation) is exact by
+    # construction and reports exact-output agreement
+    def tok_agree(a, b):
+        return float(np.mean([
+            np.mean(np.array(results[a][i]) == np.array(results[b][i]))
+            for i in range(args.requests)]))
+
+    def exact_agree(a, b):
+        return float(np.mean([results[a][i] == results[b][i]
+                              for i in range(args.requests)]))
+
+    print(f"[serve_llm] dense vs sp2_4 greedy-token agreement: "
+          f"{tok_agree('dense/dense', 'sp2_4/dense'):.2f}")
     print(f"[serve_llm] dense vs paged KV exact-output agreement: "
-          f"{agree_p:.2f}")
-    print(f"[serve_llm] f32 vs SPx-quantized KV pages token agreement: "
-          f"{agree_kvq:.2f}")
-    print(f"[serve_llm] private vs shared prefix pages exact-output "
-          f"agreement: {agree_share:.2f}")
-    print(f"[serve_llm] plain vs speculative decode exact-output "
-          f"agreement: {agree_spec:.2f}")
+          f"{exact_agree('sp2_4/dense', 'sp2_4/paged'):.2f}")
+    if "sp2_4/paged+kvq" in results:
+        print(f"[serve_llm] f32 vs SPx-quantized KV pages token "
+              f"agreement: "
+              f"{tok_agree('sp2_4/paged', 'sp2_4/paged+kvq'):.2f}")
+    if "sp2_4/paged+share" in results:
+        print(f"[serve_llm] private vs shared prefix pages exact-output "
+              f"agreement: "
+              f"{exact_agree('sp2_4/paged', 'sp2_4/paged+share'):.2f}")
+    if "sp2_4/paged+spec" in results:
+        print(f"[serve_llm] plain vs speculative decode exact-output "
+              f"agreement: "
+              f"{exact_agree('sp2_4/paged', 'sp2_4/paged+spec'):.2f}")
     return results
 
 

@@ -5,6 +5,14 @@ run a synthetic request workload, reporting latency/throughput/occupancy.
       --requests 16 --scheme sp2_4 --kv-layout paged \
       --kv-quant --kv-scheme spx_8_x3
 
+--arch accepts every bundled config, not just attention-only decoders:
+SSM (xlstm-350m), hybrid (jamba-1.5-large-398b) and M-RoPE
+(qwen2-vl-2b) configs serve through the unified state cache's slab
+region, and enc-dec (whisper-small) runs with synthetic input frames —
+two distinct inputs alternate across requests, so identical inputs
+share one encoder pass through the cross-KV region (docs/SERVING.md,
+"The unified state cache").
+
 Weight quantization (--scheme) and KV-cache quantization (--kv-quant +
 --kv-scheme, uniform8 baseline or non-uniform SPx) are independent axes;
 both compose with either KV layout — see docs/QUANTIZATION.md.
@@ -43,6 +51,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core import spx
+from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime
 from repro.serving.engine import Request, ServeEngine
@@ -118,10 +127,20 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
-    if cfg.enc_dec:
-        raise SystemExit("serve driver targets decoder-only archs")
 
-    params = lm_mod.lm_init(jax.random.PRNGKey(args.seed), cfg)
+    # the driver serves every bundled architecture: decoder-only configs
+    # (dense/MoE/SSM/hybrid/M-RoPE) through the LM assembly, enc-dec
+    # through the encoder-decoder assembly with synthetic input frames —
+    # two distinct inputs alternating across requests, so the state
+    # cache's shared cross-KV region sees hits (docs/SERVING.md)
+    if cfg.enc_dec:
+        params = encdec_mod.encdec_init(jax.random.PRNGKey(args.seed), cfg)
+        fr_rng = np.random.default_rng(args.seed + 1)
+        frame_sets = fr_rng.standard_normal(
+            (2, cfg.enc_seq_len, cfg.d_model)).astype(np.float32)
+    else:
+        params = lm_mod.lm_init(jax.random.PRNGKey(args.seed), cfg)
+        frame_sets = None
     scheme = None if args.scheme == "none" else args.scheme
     rt = Runtime(impl="auto", q_chunk=256, kv_quant=args.kv_quant,
                  kv_scheme=args.kv_scheme)
@@ -157,7 +176,9 @@ def main(argv=None):
             [sys_prompt,
              rng.integers(0, cfg.vocab_size, plen).astype(np.int32)])
         eng.submit(Request(rid=i, prompt=prompt,
-                           max_new_tokens=args.new_tokens))
+                           max_new_tokens=args.new_tokens,
+                           frames=(None if frame_sets is None
+                                   else frame_sets[i % 2])))
     done = eng.run()
     dt = time.time() - t0
     n_tok = sum(len(r.output) for r in done)
@@ -172,6 +193,14 @@ def main(argv=None):
               f"peak {m['occupancy_peak']:.2f}, "
               f"peak KV {m['peak_kv_bytes'] / 2**20:.2f} MiB, "
               f"denials {m['admission_denials']}")
+        if m["slab_bytes_per_seq"] or m["cross_bytes_per_entry"]:
+            print(f"[serve] state cache: peak "
+                  f"{m['peak_state_bytes'] / 2**20:.2f} MiB "
+                  f"(slabs {m['peak_slabs']} x "
+                  f"{m['slab_bytes_per_seq'] / 2**20:.2f} MiB, cross "
+                  f"{m['peak_cross']} x "
+                  f"{m['cross_bytes_per_entry'] / 2**20:.2f} MiB, "
+                  f"{m['cross_hits']}/{m['cross_lookups']} cross hits)")
         if m["scheduler"] == "cb":
             host_cap = ("inf" if m["host_pages"] is None
                         else m["host_pages"])

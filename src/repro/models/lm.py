@@ -26,7 +26,9 @@ from repro.nn.transformer import (slot_init_cache, slot_init_paged_cache,
 __all__ = ["lm_init", "lm_loss", "lm_logits", "lm_prefill", "lm_decode_step",
            "init_caches", "paged_init_caches", "lm_paged_step",
            "lm_paged_verify", "lm_paged_fused_step", "paged_copy_page",
-           "paged_gather_pages", "paged_scatter_pages", "chunked_ce"]
+           "paged_gather_pages", "paged_scatter_pages",
+           "paged_gather_slabs", "paged_scatter_slabs", "paged_reset_slabs",
+           "paged_fill_cross", "chunked_ce"]
 
 LOSS_CHUNK = 256
 AUX_WEIGHT = 0.01
@@ -188,15 +190,30 @@ def lm_decode_step(params, token, pos, caches, cfg: ArchConfig, rt: Runtime):
 # -- paged serving (docs/SERVING.md) ----------------------------------------
 
 def paged_init_caches(cfg: ArchConfig, n_pages: int, page_size: int,
-                      dtype=jnp.bfloat16, kv_quant: bool = False):
-    """Physical KV page pools for every slot in the pattern. Attention-only
-    patterns (raises NotImplementedError otherwise — SSM state has nothing
-    to page; serve those with the dense layout). ``kv_quant`` switches the
-    pools to the codes+scale quantized layout (scheme from
-    ``Runtime.kv_scheme`` at step time)."""
+                      dtype=jnp.bfloat16, kv_quant: bool = False,
+                      n_slabs: int = 0, n_cross: int = 0):
+    """Device state-cache regions for every slot in the pattern: KV page
+    pools for attention slots, ``n_slabs`` recurrent-state slabs for SSM
+    slots, ``n_cross`` read-only encoder-output entries for xdec slots —
+    heterogeneous (hybrid) patterns get exactly the regions each slot
+    needs. ``kv_quant`` switches the page pools to the codes+scale
+    quantized layout (scheme from ``Runtime.kv_scheme`` at step time)."""
     return [slot_init_paged_cache(slot, cfg, n_pages, page_size, dtype,
-                                  kv_quant=kv_quant)
+                                  kv_quant=kv_quant, n_slabs=n_slabs,
+                                  n_cross=n_cross)
             for slot in cfg.pattern]
+
+
+# region partitioning by leaf key: the page pools ("kp"/"vp" — arrays or
+# codes+scale dicts), the read-only cross entries ("xk"/"xv"), and
+# everything else is per-sequence slab state (SSM h/conv/C/n/m/c leaves)
+_PAGE_KEYS = ("kp", "vp")
+_CROSS_KEYS = ("xk", "xv")
+
+
+def _slab_keys(slot_cache: dict):
+    return [k for k in slot_cache
+            if k not in _PAGE_KEYS and k not in _CROSS_KEYS]
 
 
 def paged_copy_page(caches, src, dst):
@@ -205,24 +222,38 @@ def paged_copy_page(caches, src, dst):
     quantized). This is the serving engine's copy-on-write: a request
     whose prompt fully matches a shared page up to its last token gets a
     private copy to finish (and later decode into) so the shared original
-    stays immutable. Page index is axis 1 of every paged cache leaf
+    stays immutable. Page index is axis 1 of every page-region leaf
     (``(P, n_pages, Hkv, page_size, dh)``); ``src``/``dst`` may be traced
     scalars, so one jit of this function serves every (src, dst) pair.
+    Slab and cross regions pass through untouched — pages are the only
+    copy-on-write region (slabs are exclusive, cross entries immutable).
     """
     def cp(leaf):
         return leaf.at[:, dst].set(leaf[:, src])
-    return jax.tree_util.tree_map(cp, caches)
+    out = []
+    for slot_cache in caches:
+        new = dict(slot_cache)
+        for k in _PAGE_KEYS:
+            if k in slot_cache:
+                new[k] = jax.tree_util.tree_map(cp, slot_cache[k])
+        out.append(new)
+    return out
 
 
 def paged_gather_pages(caches, pages):
-    """Gather whole physical KV pages across every cache leaf: the
+    """Gather whole physical KV pages across every page-region leaf: the
     serving engine's preemption snapshot. ``pages`` is a (n,) int32 page
     index vector; each ``(P, n_pages, Hkv, page_size, dh)`` leaf yields
     ``(P, n, Hkv, page_size, dh)``. The index vector is traced, so one
     jit per padded length serves every page set of that size (the engine
     pads to powers of two, duplicating the last page — callers slice the
-    duplicates off host-side)."""
-    return jax.tree_util.tree_map(lambda leaf: leaf[:, pages], caches)
+    duplicates off host-side). Returns the page-region subtree only (one
+    dict per slot; empty for slab-only slots) — slab state snapshots
+    through ``paged_gather_slabs``."""
+    return [{k: jax.tree_util.tree_map(lambda leaf: leaf[:, pages],
+                                       slot_cache[k])
+             for k in _PAGE_KEYS if k in slot_cache}
+            for slot_cache in caches]
 
 
 def paged_scatter_pages(caches, pages, payload):
@@ -231,25 +262,93 @@ def paged_scatter_pages(caches, pages, payload):
     freshly allocated pages. Duplicate indices in ``pages`` (the engine's
     pow2 padding) carry identical payload rows, so the write is
     deterministic regardless of scatter order."""
-    return jax.tree_util.tree_map(
-        lambda leaf, pay: leaf.at[:, pages].set(pay), caches, payload)
+    out = []
+    for slot_cache, pay in zip(caches, payload):
+        new = dict(slot_cache)
+        for k in _PAGE_KEYS:
+            if k in slot_cache:
+                new[k] = jax.tree_util.tree_map(
+                    lambda leaf, p: leaf.at[:, pages].set(p),
+                    slot_cache[k], pay[k])
+        out.append(new)
+    return out
 
 
-def lm_paged_step(params, tokens, ctx_len, block_table, n_valid, caches,
-                  cfg: ArchConfig, rt: Runtime):
+def paged_gather_slabs(caches, slab):
+    """Snapshot one slab's recurrent state across every SSM slot: each
+    ``(P, n_slabs, ...)`` slab leaf yields ``(P, ...)``. ``slab`` may be
+    a traced scalar — one jit serves every slab index. Returns the
+    slab-region subtree only (one dict per slot; empty for attention
+    slots)."""
+    return [{k: slot_cache[k][:, slab] for k in _slab_keys(slot_cache)}
+            for slot_cache in caches]
+
+
+def paged_scatter_slabs(caches, slab, payload):
+    """Restore a snapshotted slab (inverse of ``paged_gather_slabs``) —
+    the resumed sequence may land on a different slab index than it was
+    preempted from; the pool's ``seq_slab`` says where."""
+    out = []
+    for slot_cache, pay in zip(caches, payload):
+        new = dict(slot_cache)
+        for k in _slab_keys(slot_cache):
+            new[k] = slot_cache[k].at[:, slab].set(
+                pay[k].astype(slot_cache[k].dtype))
+        out.append(new)
+    return out
+
+
+def paged_reset_slabs(caches, slab):
+    """Zero one slab across every SSM slot — a freshly admitted sequence
+    must start from the zero recurrent state, and its slab still holds
+    whatever the previous owner left behind (pages don't need this: every
+    page position is written before it is attended)."""
+    out = []
+    for slot_cache in caches:
+        new = dict(slot_cache)
+        for k in _slab_keys(slot_cache):
+            leaf = slot_cache[k]
+            new[k] = leaf.at[:, slab].set(
+                jnp.zeros(leaf.shape[:1] + leaf.shape[2:], leaf.dtype))
+        out.append(new)
+    return out
+
+
+def paged_fill_cross(caches, idx, entries):
+    """Write one encoder pass's projected K/V into cross entry ``idx``
+    across every xdec slot. ``entries``: per-slot ``None`` (non-xdec) or
+    {"xk", "xv"} arrays shaped (P, 1, Hkv, enc_seq_len, dh) — the output
+    of ``models.encdec.encdec_cross_kv`` on a single input. Entries are
+    written once here and only ever read by the decode path (read-only
+    sharing across sequences)."""
+    out = []
+    for slot_cache, ent in zip(caches, entries):
+        new = dict(slot_cache)
+        if ent is not None:
+            for k in _CROSS_KEYS:
+                new[k] = slot_cache[k].at[:, idx].set(
+                    ent[k][:, 0].astype(slot_cache[k].dtype))
+        out.append(new)
+    return out
+
+
+def lm_paged_step(params, tokens, ctx_len, block_table, n_valid, state_idx,
+                  caches, cfg: ArchConfig, rt: Runtime):
     """One paged engine step: run the next C tokens of each sequence —
-    a prefill chunk (C > 1) or a decode step (C == 1) — against the paged
-    KV cache.
+    a prefill chunk (C > 1) or a decode step (C == 1) — against the
+    unified state-cache.
 
     tokens: (B, C) int32 (rows may be padded past ``n_valid``);
     ctx_len: (B,) int32 tokens already in the pages; block_table:
     (B, max_pages) int32; n_valid: (B,) int32 valid tokens in this chunk
-    (0 = inactive row). Returns (logits (B, V) at each row's last valid
-    position, new_caches).
+    (0 = inactive row); state_idx: (B, 2) int32 per-row (slab, cross)
+    indices, out-of-range sentinels for rows without that region (pure
+    attention patterns pass all-sentinel). Returns (logits (B, V) at each
+    row's last valid position, new_caches).
     """
     x = embedding_apply(params["embed"], tokens)
     h, new_caches = stack_paged(params["stack"], x, ctx_len, block_table,
-                                n_valid, cfg, rt, caches)
+                                n_valid, state_idx, cfg, rt, caches)
     h = norm_apply(cfg.norm, params["final_norm"], h)
     last = jnp.clip(n_valid - 1, 0, tokens.shape[1] - 1)          # (B,)
     h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
@@ -257,8 +356,8 @@ def lm_paged_step(params, tokens, ctx_len, block_table, n_valid, caches,
     return logits, new_caches
 
 
-def lm_paged_verify(params, tokens, ctx_len, block_table, n_valid, caches,
-                    cfg: ArchConfig, rt: Runtime):
+def lm_paged_verify(params, tokens, ctx_len, block_table, n_valid,
+                    state_idx, caches, cfg: ArchConfig, rt: Runtime):
     """Score a speculation window in one paged forward pass (speculative
     decoding's verify step — serving/spec.py has the drafter).
 
@@ -275,14 +374,14 @@ def lm_paged_verify(params, tokens, ctx_len, block_table, n_valid, caches,
     """
     x = embedding_apply(params["embed"], tokens)
     h, new_caches = stack_paged(params["stack"], x, ctx_len, block_table,
-                                n_valid, cfg, rt, caches)
+                                n_valid, state_idx, cfg, rt, caches)
     h = norm_apply(cfg.norm, params["final_norm"], h)
     logits = jnp.dot(h, _head_w(params, cfg).astype(h.dtype))
     return logits, new_caches
 
 
 def lm_paged_fused_step(params, tokens, ctx_len, block_table, n_valid,
-                        caches, cfg: ArchConfig, rt: Runtime):
+                        state_idx, caches, cfg: ArchConfig, rt: Runtime):
     """One fused decode tick: plain decode (C == 1) *and* the speculative
     verify window (C == K+1) through the ragged decode megakernel — every
     layer's attention is ONE ``paged_decode_ragged`` launch over the
@@ -300,7 +399,8 @@ def lm_paged_fused_step(params, tokens, ctx_len, block_table, n_valid,
     """
     x = embedding_apply(params["embed"], tokens)
     h, new_caches = stack_paged(params["stack"], x, ctx_len, block_table,
-                                n_valid, cfg, rt, caches, fused=True)
+                                n_valid, state_idx, cfg, rt, caches,
+                                fused=True)
     h = norm_apply(cfg.norm, params["final_norm"], h)
     logits = jnp.dot(h, _head_w(params, cfg).astype(h.dtype))
     return logits, new_caches

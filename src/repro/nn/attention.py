@@ -511,8 +511,8 @@ def _paged_chunk_attention(q, k_pages, v_pages, block_table, positions,
 def attn_paged_step(p: dict, x: jax.Array, ctx_len: jax.Array,
                     block_table: jax.Array, cache: dict, *, n_heads: int,
                     n_kv_heads: int, head_dim: int, n_valid: jax.Array,
-                    rope_theta: float = 10000.0, rt: Runtime,
-                    fused: bool = False):
+                    rope_theta: float = 10000.0, mrope_sections=None,
+                    rt: Runtime, fused: bool = False):
     """Attention sublayer over the paged KV cache — one code path for both
     chunked prefill (C > 1) and decode (C == 1, dispatched to the
     paged-attention kernel via the registry).
@@ -534,7 +534,17 @@ def attn_paged_step(p: dict, x: jax.Array, ctx_len: jax.Array,
     quantized = isinstance(cache["kp"], dict)
     q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim, rt)
     positions = ctx_len[:, None] + jnp.arange(c, dtype=jnp.int32)   # (B, C)
-    q, k = _apply_positional(q, k, positions, rope_theta, None)
+    if mrope_sections is not None:
+        # text-stream M-RoPE paged positions: the three rotary streams
+        # share the token index (equivalent to plain RoPE for text-only
+        # decode — exactly what the dense path broadcasts). RoPE happens
+        # before the cache write, so the fused/quantized paths need no
+        # position plumbing of their own.
+        positions3 = jnp.broadcast_to(positions[:, None, :], (b, 3, c))
+        q, k = _apply_positional(q, k, positions3, rope_theta,
+                                 mrope_sections)
+    else:
+        q, k = _apply_positional(q, k, positions, rope_theta, None)
     valid = jnp.arange(c)[None, :] < n_valid[:, None]               # (B, C)
     kp, vp = paged_kv_write(cache["kp"], cache["vp"], k, v, block_table,
                             positions, valid, kv_scheme=rt.kv_scheme)

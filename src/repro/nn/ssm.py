@@ -21,8 +21,11 @@ from .layers import (constrain_feature_sharded, dense_apply, dense_init,
 
 __all__ = [
     "mamba_init", "mamba_apply", "mamba_decode_step", "mamba_init_state",
+    "mamba_paged_step",
     "mlstm_init", "mlstm_apply", "mlstm_decode_step", "mlstm_init_state",
+    "mlstm_paged_step",
     "slstm_init", "slstm_apply", "slstm_decode_step", "slstm_init_state",
+    "slstm_paged_step",
 ]
 
 
@@ -189,6 +192,67 @@ def mamba_decode_step(p: dict, x: jax.Array, state: dict, *, rt: Runtime):
     return out, new_state
 
 
+def _paged_conv(state_conv, u_pre, n_valid, conv_w, conv_b):
+    """Causal depthwise conv over a ragged C-token chunk, continuing from
+    a cached left-context window (the slab ``conv`` leaf).
+
+    ``state_conv``: (B, dc-1, di) — pre-activations of the last dc-1
+    tokens before this chunk; ``u_pre``: (B, C, di); ``n_valid``: (B,)
+    int32 in [0, C]. Returns ``(u_c, new_conv)``: f32 conv pre-silu
+    outputs for every chunk position (invalid positions produce garbage
+    the caller masks/ignores) and the window advanced to end exactly at
+    each row's last *valid* token — a row with ``n_valid == 0`` gets its
+    window back unchanged."""
+    b, c, di = u_pre.shape
+    dcm1 = state_conv.shape[1]
+    window = jnp.concatenate([state_conv, u_pre.astype(state_conv.dtype)],
+                             axis=1)                   # (B, dc-1+C, di)
+    w32 = conv_w.astype(jnp.float32)
+    win32 = window.astype(jnp.float32)
+    out = jnp.zeros((b, c, di), jnp.float32)
+    for j in range(dcm1 + 1):   # dc taps (dc is 4): unrolled, no While
+        out = out + win32[:, j:j + c, :] * w32[j]
+    out = out + conv_b.astype(jnp.float32)
+    idx = n_valid[:, None].astype(jnp.int32) \
+        + jnp.arange(dcm1, dtype=jnp.int32)[None, :]   # (B, dc-1)
+    new_conv = jnp.take_along_axis(window, idx[..., None], axis=1)
+    return out, new_conv
+
+
+def mamba_paged_step(p: dict, x: jax.Array, state: dict, n_valid, *,
+                     rt: Runtime):
+    """Slab-backed ragged chunk step: x (B, C, D) with ``n_valid`` (B,)
+    valid tokens per row, state gathered from the StateCache slab region
+    ({'h': (B,di,ds) f32, 'conv': (B,dc-1,di)}).
+
+    Invalid positions are identity-masked (dt forced to 0 => dA = 1,
+    dBu = 0), so the returned state equals running only each row's valid
+    prefix — a fully inactive row (n_valid == 0) returns its state bit
+    exact. Chaining C=1 steps matches ``mamba_decode_step`` and the
+    ``mamba_apply`` full scan (regression-tested)."""
+    b, c, _ = x.shape
+    di, d_state, d_conv, dt_rank = _mamba_dims(p)
+    xz = dense_apply(p["in_proj"], x, rt)
+    u_pre, z = jnp.split(xz, 2, axis=-1)                   # (B,C,di)
+    u_c, new_conv = _paged_conv(state["conv"], u_pre, n_valid,
+                                p["conv_w"], p["conv_b"])
+    u = jax.nn.silu(u_c).astype(x.dtype)                   # (B,C,di)
+    proj = dense_apply(p["x_proj"], u, rt)
+    dt, Bm, Cm = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dense_apply(p["dt_proj"], dt, rt)
+                         .astype(jnp.float32)).astype(x.dtype)
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] \
+        < n_valid[:, None].astype(jnp.int32)               # (B,C)
+    dt = jnp.where(valid[..., None], dt, jnp.zeros_like(dt))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, hT = _selective_scan(u, dt, A, Bm, Cm,
+                            p["D"].astype(jnp.float32), state["h"],
+                            unroll=rt.unroll)
+    out = dense_apply(p["out_proj"], (y.astype(x.dtype) * jax.nn.silu(z)),
+                      rt)
+    return out, {"h": hT, "conv": new_conv}
+
+
 # ===========================================================================
 # mLSTM (xLSTM's matrix-memory block, stabilized exponential gating)
 # ===========================================================================
@@ -299,11 +363,14 @@ def _mlstm_chunkwise(q, k, v, ig, fg, C0, n0, m0, *, chunk: int = 128,
         scale0 = jnp.exp(F + m0c[:, None] - m)   # (B,c,NH)
         num0 = jnp.einsum("bhvk,bchk->bchv", C0c, qf) * scale0[..., None]
         den0 = jnp.einsum("bhk,bchk->bch", n0c, qf) * scale0
-        # intra-chunk scores: w_tj = e^{logi_j - F_j + F_t - m_t}, j<=t
+        # intra-chunk scores: w_tj = e^{logi_j - F_j + F_t - m_t}, j<=t.
+        # Mask the exponent (not the result): for j>t it grows like
+        # F_t - F_j ~ 0.7*(j-t), which overflows exp at c>=128 and would
+        # turn the masked product into inf*0 = NaN.
         a_j = (ig_c - F)                          # (B,c,NH) at index j
-        w = jnp.exp(a_j[:, None, :, :] + (F - m)[:, :, None, :])  # (B,t,j,NH)
-        causal = jnp.tril(jnp.ones((c, c), jnp.float32))
-        w = w * causal[None, :, :, None]
+        expo = a_j[:, None, :, :] + (F - m)[:, :, None, :]        # (B,t,j,NH)
+        causal = jnp.tril(jnp.ones((c, c), jnp.bool_))
+        w = jnp.exp(jnp.where(causal[None, :, :, None], expo, -jnp.inf))
         s_qk = jnp.einsum("bthk,bjhk->btjh", qf, kf)
         sw = s_qk * w
         num = num0 + jnp.einsum("btjh,bjhv->bthv", sw, vf)
@@ -379,6 +446,40 @@ def mlstm_decode_step(p: dict, x: jax.Array, state: dict, *, rt: Runtime,
     return out, {"C": C, "n": n, "m": m, "conv": window[:, 1:, :]}
 
 
+def mlstm_paged_step(p: dict, x: jax.Array, state: dict, n_valid, *,
+                     rt: Runtime, n_heads: int = 4):
+    """Slab-backed ragged chunk step for mLSTM: x (B, C, D), ``n_valid``
+    (B,) valid tokens per row, state from the slab region.
+
+    Invalid positions are identity-masked through the gates: fg forced to
+    +1e9 (log_sigmoid -> exactly 0.0 in f32, decay 1) and ig to -1e30
+    (zero contribution), so ``_mlstm_chunkwise`` carries (C, n, m) across
+    them untouched and each row's returned state equals running only its
+    valid prefix."""
+    b, c, _ = x.shape
+    di, nh, dh = _mlstm_dims(p, n_heads)
+    xz = dense_apply(p["in_proj"], x, rt)
+    u_pre, z = jnp.split(xz, 2, axis=-1)                   # (B,C,di)
+    u_c, new_conv = _paged_conv(state["conv"], u_pre, n_valid,
+                                p["conv_w"], p["conv_b"])
+    u = jax.nn.silu(u_c).astype(x.dtype)
+    q, k, v, ig, fg = _mlstm_qkv_gates(p, u, rt, nh)       # gates (B,C,NH)
+    valid = (jnp.arange(c, dtype=jnp.int32)[None, :]
+             < n_valid[:, None].astype(jnp.int32))[..., None]
+    fg = jnp.where(valid, fg, jnp.float32(1e9))
+    ig = jnp.where(valid, ig, jnp.float32(-1e30))
+    h4, C_, n_, m_ = _mlstm_chunkwise(q, k, v, ig, fg, state["C"],
+                                      state["n"], state["m"],
+                                      unroll=rt.unroll)
+    h = h4.reshape(b, c, di).astype(x.dtype)
+    hn = h.reshape(b, c, nh, dh)
+    hn = hn * jax.lax.rsqrt(jnp.mean(hn.astype(jnp.float32) ** 2, axis=-1,
+                                     keepdims=True) + 1e-6).astype(x.dtype)
+    h = hn.reshape(b, c, di) * p["out_norm_g"].astype(x.dtype)
+    out = dense_apply(p["down_proj"], h * jax.nn.silu(z), rt)
+    return out, {"C": C_, "n": n_, "m": m_, "conv": new_conv}
+
+
 # ===========================================================================
 # sLSTM (scalar-memory xLSTM block, block-diagonal recurrence)
 # ===========================================================================
@@ -451,4 +552,30 @@ def slstm_decode_step(p: dict, x: jax.Array, state: dict, *, rt: Runtime):
     pre = dense_apply(p["w_in"], x, rt)[:, 0]              # (B,4D)
     carry = _slstm_cell(p, state, pre)
     h = carry["h"].reshape(b, 1, d).astype(x.dtype)
+    return dense_apply(p["out_proj"], h, rt), carry
+
+
+def slstm_paged_step(p: dict, x: jax.Array, state: dict, n_valid, *,
+                     rt: Runtime):
+    """Slab-backed ragged chunk step for sLSTM: x (B, C, D), ``n_valid``
+    (B,) valid tokens per row. The recurrence is inherently sequential, so
+    the chunk scans per token with a per-row masked carry: rows past
+    their valid length keep the previous state bit exact (the cell still
+    computes, the ``where`` discards it)."""
+    b, c, d = x.shape
+    pre = dense_apply(p["w_in"], x, rt)                    # (B,C,4D)
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] \
+        < n_valid[:, None].astype(jnp.int32)               # (B,C)
+
+    def step(carry, inp):
+        x_t, v_t = inp                                     # (B,4D), (B,)
+        new = _slstm_cell(p, carry, x_t)
+        keep = v_t[:, None, None]
+        carry = {k: jnp.where(keep, new[k], carry[k]) for k in carry}
+        return carry, carry["h"]
+
+    carry, hs = jax.lax.scan(step, state,
+                             (jnp.swapaxes(pre, 0, 1),
+                              jnp.swapaxes(valid, 0, 1)))
+    h = jnp.swapaxes(hs, 0, 1).reshape(b, c, d).astype(x.dtype)
     return dense_apply(p["out_proj"], h, rt), carry

@@ -24,7 +24,8 @@ from repro.configs.base import ArchConfig
 from repro.runtime import Runtime
 
 from . import ssm
-from .attention import (attn_apply_dense, attn_decode_step, attn_init,
+from .attention import (_apply_positional, _project_qkv, attention_core,
+                        attn_apply_dense, attn_decode_step, attn_init,
                         attn_paged_step)
 from .layers import norm_apply, norm_init, opt_barrier
 from .mlp import mlp_apply, mlp_init
@@ -115,6 +116,25 @@ def _cross_kv(p_attn: dict, enc_out: jax.Array, n_kv_heads: int,
     return k, v
 
 
+def _slab_step(cache: dict, state_idx, n_valid, step_fn):
+    """Run an SSM paged step against the slab region: gather each row's
+    slab (``state_idx[:, 0]``), step, scatter the new state back. Rows
+    with ``n_valid == 0`` (inactive slots in a mixed prefill/decode tick)
+    and rows whose slab index is the out-of-range sentinel are dropped by
+    the scatter — their slabs stay bit-identical (the step itself is also
+    identity-masked, so this is belt and braces). ``cache``: per-slot
+    state leaves shaped (n_slabs, ...)."""
+    slab_idx = state_idx[:, 0].astype(jnp.int32)
+    n_slabs = next(iter(cache.values())).shape[0]
+    safe = jnp.clip(slab_idx, 0, max(n_slabs - 1, 0))
+    state_b = {k: leaf[safe] for k, leaf in cache.items()}
+    y, ns = step_fn(state_b)
+    dst = jnp.where(n_valid > 0, slab_idx, n_slabs)
+    new_cache = {k: leaf.at[dst].set(ns[k].astype(leaf.dtype), mode="drop")
+                 for k, leaf in cache.items()}
+    return y, new_cache
+
+
 def _slot_apply(slot: str, p: dict, x, positions, cfg: ArchConfig,
                 rt: Runtime, *, mode: str, cache=None, pos=None,
                 enc_out=None, causal: bool = True, paged_ctx=None,
@@ -122,26 +142,26 @@ def _slot_apply(slot: str, p: dict, x, positions, cfg: ArchConfig,
     """mode: 'train' | 'prefill' | 'decode' | 'paged'. Returns
     (x, new_cache, aux). Paged mode (serving: chunked prefill + paged
     decode through one path) takes ``paged_ctx = (ctx_len, block_table,
-    n_valid)`` and is attention-only — SSM/hybrid/enc-dec patterns keep
-    the dense cache layout (their state is O(1) per sequence, there is
-    nothing to page)."""
+    n_valid, state_idx)`` and routes per *slot kind*: attention and
+    decoder self-attention write token pages, SSM mixers read/write their
+    row of the slab region (``state_idx[:, 0]``), cross-attention reads
+    the shared read-only cross region (``state_idx[:, 1]``) — one
+    state-cache, heterogeneous layers."""
     mixer, ffn = _parse_slot(slot)
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
 
     h = norm_apply(cfg.norm, p["norm1"], x)
-    if mode == "paged" and mixer != "attn":
-        raise NotImplementedError(
-            f"paged KV serving supports attention-only patterns; "
-            f"got slot {slot!r} (use kv_layout='dense')")
+    if mode == "paged":
+        ctx_len, block_table, n_valid, state_idx = paged_ctx
     if mixer in ("attn", "xdec"):
         if mode == "paged":
-            ctx_len, block_table, n_valid = paged_ctx
             y, new_cache = attn_paged_step(
                 p["attn"], h, ctx_len, block_table, cache,
                 n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
                 head_dim=cfg.dh, n_valid=n_valid,
-                rope_theta=cfg.rope_theta, rt=rt, fused=fused)
+                rope_theta=cfg.rope_theta,
+                mrope_sections=cfg.mrope_sections, rt=rt, fused=fused)
         elif mode == "decode":
             y, kv = attn_decode_step(
                 p["attn"], h, pos, (cache["k"], cache["v"]),
@@ -182,7 +202,33 @@ def _slot_apply(slot: str, p: dict, x, positions, cfg: ArchConfig,
         x = x + y
         if mixer == "xdec":
             hx = norm_apply(cfg.norm, p["norm_x"], x)
-            if mode == "decode":
+            if mode == "paged":
+                # cross-attention against the shared read-only cross
+                # region: each row reads the encoder-output K/V entry its
+                # sequence was mapped to at admission (state_idx[:, 1]);
+                # entries are written once by the engine's encoder pass
+                # and never mutated here. Matches the dense path: q is
+                # roped at the absolute token position, K/V are unroped,
+                # attention is non-causal over all encoder frames.
+                bq, cq, _ = hx.shape
+                n_cross = new_cache["xk"].shape[0]
+                xs_idx = jnp.clip(state_idx[:, 1], 0,
+                                  max(n_cross - 1, 0)).astype(jnp.int32)
+                kh = new_cache["xk"][xs_idx]       # (B, Hkv, S_enc, dh)
+                vh = new_cache["xv"][xs_idx]
+                qx, kx, _ = _project_qkv(p["xattn"], hx, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.dh, rt)
+                positions_x = ctx_len[:, None] \
+                    + jnp.arange(cq, dtype=jnp.int32)
+                qx, _ = _apply_positional(qx, kx, positions_x,
+                                          cfg.rope_theta, None)
+                o = attention_core(jnp.swapaxes(qx, 1, 2), kh, vh,
+                                   causal=False, rt=rt)
+                y = jnp.swapaxes(o, 1, 2).reshape(bq, cq,
+                                                  cfg.n_heads * cfg.dh)
+                from .layers import dense_apply
+                y = dense_apply(p["xattn"]["wo"], y, rt)
+            elif mode == "decode":
                 xkv = (cache["xk"], cache["xv"])
                 y, _ = attn_decode_step(
                     p["xattn"], hx, pos, None, n_heads=cfg.n_heads,
@@ -205,7 +251,12 @@ def _slot_apply(slot: str, p: dict, x, positions, cfg: ArchConfig,
                                      .astype(cache["xv"].dtype))
             x = x + y
     elif mixer == "mamba":
-        if mode == "decode":
+        if mode == "paged":
+            y, new_cache = _slab_step(
+                cache, state_idx, n_valid,
+                lambda st: ssm.mamba_paged_step(p["mamba"], h, st, n_valid,
+                                                rt=rt))
+        elif mode == "decode":
             y, new_cache = ssm.mamba_decode_step(p["mamba"], h, cache, rt=rt)
         elif mode == "prefill":
             y, new_cache = ssm.mamba_apply(p["mamba"], h, rt=rt,
@@ -214,7 +265,13 @@ def _slot_apply(slot: str, p: dict, x, positions, cfg: ArchConfig,
             y = ssm.mamba_apply(p["mamba"], h, rt=rt)
         x = x + y
     elif mixer == "mlstm":
-        if mode == "decode":
+        if mode == "paged":
+            y, new_cache = _slab_step(
+                cache, state_idx, n_valid,
+                lambda st: ssm.mlstm_paged_step(p["mlstm"], h, st, n_valid,
+                                                rt=rt,
+                                                n_heads=cfg.lstm_heads))
+        elif mode == "decode":
             y, new_cache = ssm.mlstm_decode_step(p["mlstm"], h, cache, rt=rt,
                                                  n_heads=cfg.lstm_heads)
         elif mode == "prefill":
@@ -225,7 +282,12 @@ def _slot_apply(slot: str, p: dict, x, positions, cfg: ArchConfig,
             y = ssm.mlstm_apply(p["mlstm"], h, rt=rt, n_heads=cfg.lstm_heads)
         x = x + y
     elif mixer == "slstm":
-        if mode == "decode":
+        if mode == "paged":
+            y, new_cache = _slab_step(
+                cache, state_idx, n_valid,
+                lambda st: ssm.slstm_paged_step(p["slstm"], h, st, n_valid,
+                                                rt=rt))
+        elif mode == "decode":
             y, new_cache = ssm.slstm_decode_step(p["slstm"], h, cache, rt=rt)
         elif mode == "prefill":
             y, new_cache = ssm.slstm_apply(p["slstm"], h, rt=rt,
@@ -359,18 +421,22 @@ def stack_decode(params: dict, x: jax.Array, pos, cfg: ArchConfig,
 
 
 def stack_paged(params: dict, x: jax.Array, ctx_len, block_table, n_valid,
-                cfg: ArchConfig, rt: Runtime, caches, *,
+                state_idx, cfg: ArchConfig, rt: Runtime, caches, *,
                 fused: bool = False):
-    """C-token step over the paged KV cache — chunked prefill (C > 1) and
-    paged decode (C == 1) share this path. x: (B, C, D); ctx_len/n_valid:
-    (B,) int32; block_table: (B, max_pages) int32; caches: per-slot
-    {"kp", "vp"} pools stacked over periods. ``fused`` routes every
-    layer's attention through the ragged decode megakernel (serving
-    decode/verify ticks; prefill chunks stay on the gather path).
-    Returns (x, new_caches)."""
+    """C-token step over the unified state-cache — chunked prefill (C > 1)
+    and paged decode (C == 1) share this path, for every slot kind. x:
+    (B, C, D); ctx_len/n_valid: (B,) int32; block_table: (B, max_pages)
+    int32; state_idx: (B, 2) int32 — column 0 is each row's slab index
+    (SSM state), column 1 its cross-region entry (encoder-output KV);
+    out-of-range sentinels mark rows without that region. caches:
+    per-slot region pytrees stacked over periods
+    (``slot_init_paged_cache``). ``fused`` routes every attention through
+    the ragged decode megakernel (serving decode/verify ticks; prefill
+    chunks stay on the gather path). Returns (x, new_caches)."""
     def body(carry, xs):
         return _period_body(carry, xs, cfg=cfg, rt=rt, mode="paged",
-                            paged_ctx=(ctx_len, block_table, n_valid),
+                            paged_ctx=(ctx_len, block_table, n_valid,
+                                       state_idx),
                             fused=fused)
     (x, _), new_caches = jax.lax.scan(
         body, (x, jnp.zeros((), jnp.float32)),
@@ -449,27 +515,63 @@ def slot_init_cache(slot: str, cfg: ArchConfig, batch: int, max_seq: int,
 def slot_init_paged_cache(slot: str, cfg: ArchConfig, n_pages: int,
                           page_size: int, dtype=jnp.bfloat16,
                           n_periods: int | None = None,
-                          kv_quant: bool = False):
-    """Physical K/V page pools for one attention slot, stacked over periods:
-    {"kp", "vp"} each (P, n_pages, Hkv, page_size, dh) — or, when
-    ``kv_quant``, each a {"codes" uint8 (P, n_pages, Hkv, page_size, dh),
-    "scale" f32 (P, n_pages, Hkv, page_size, 1)} dict (codes interpreted
-    under ``Runtime.kv_scheme``; ``dtype`` is ignored — the quantized
-    layout is 1 byte/element + 4 bytes/position regardless of scheme).
-    The pool is shared by every sequence — ownership lives in the
-    host-side PagePool (serving/kv_cache.py), the device only ever sees
-    block tables."""
+                          kv_quant: bool = False, n_slabs: int = 0,
+                          n_cross: int = 0):
+    """Device arrays for one slot's state-cache region, stacked over
+    periods (axis 0) with the shared pool axis at axis 1:
+
+      * attn: token-paged K/V pools {"kp", "vp"} each
+        (P, n_pages, Hkv, page_size, dh) — or, when ``kv_quant``, each a
+        {"codes" uint8, "scale" f32 (..., 1)} dict (codes interpreted
+        under ``Runtime.kv_scheme``; ``dtype`` is ignored for them)
+      * xdec: the same self-attention pools plus the read-only cross
+        region {"xk", "xv"} each (P, n_cross, Hkv, enc_seq_len, dh) —
+        one entry per *distinct input*, shared across sequences
+      * mamba / mlstm / slstm: the slab region — per-sequence recurrent
+        state leaves shaped (P, n_slabs, ...); scan/cell states are f32,
+        conv windows use ``dtype``
+
+    Every region is shared by every sequence — ownership lives in the
+    host-side StateCache (serving/kv_cache.py); the device only ever sees
+    block tables and (slab, cross) index columns."""
     mixer, _ = _parse_slot(slot)
-    if mixer != "attn":
-        raise NotImplementedError(
-            f"paged KV cache supports 'attn' slots only, got {slot!r}")
     P = n_periods if n_periods is not None else cfg.n_periods
-    if kv_quant:
-        def pool():
-            return {"codes": jnp.zeros((P, n_pages, cfg.n_kv_heads,
-                                        page_size, cfg.dh), jnp.uint8),
-                    "scale": jnp.ones((P, n_pages, cfg.n_kv_heads,
-                                       page_size, 1), jnp.float32)}
-        return {"kp": pool(), "vp": pool()}
-    kp = jnp.zeros((P, n_pages, cfg.n_kv_heads, page_size, cfg.dh), dtype)
-    return {"kp": kp, "vp": kp + 0}
+    if mixer in ("attn", "xdec"):
+        if kv_quant:
+            def pool():
+                return {"codes": jnp.zeros((P, n_pages, cfg.n_kv_heads,
+                                            page_size, cfg.dh), jnp.uint8),
+                        "scale": jnp.ones((P, n_pages, cfg.n_kv_heads,
+                                           page_size, 1), jnp.float32)}
+            cache = {"kp": pool(), "vp": pool()}
+        else:
+            kp = jnp.zeros((P, n_pages, cfg.n_kv_heads, page_size, cfg.dh),
+                           dtype)
+            cache = {"kp": kp, "vp": kp + 0}
+        if mixer == "xdec":
+            xkv = jnp.zeros((P, n_cross, cfg.n_kv_heads, cfg.enc_seq_len,
+                             cfg.dh), dtype)
+            cache["xk"] = xkv
+            cache["xv"] = xkv + 0
+        return cache
+    if mixer == "mamba":
+        di = cfg.ssm_expand * cfg.d_model
+        return {"h": jnp.zeros((P, n_slabs, di, cfg.ssm_d_state),
+                               jnp.float32),
+                "conv": jnp.zeros((P, n_slabs, cfg.ssm_d_conv - 1, di),
+                                  dtype)}
+    if mixer == "mlstm":
+        di = cfg.ssm_expand * cfg.d_model
+        nh = cfg.lstm_heads
+        dh = di // nh
+        return {"C": jnp.zeros((P, n_slabs, nh, dh, dh), jnp.float32),
+                "n": jnp.zeros((P, n_slabs, nh, dh), jnp.float32),
+                "m": jnp.zeros((P, n_slabs, nh), jnp.float32),
+                "conv": jnp.zeros((P, n_slabs, cfg.ssm_d_conv - 1, di),
+                                  dtype)}
+    if mixer == "slstm":
+        nh = cfg.lstm_heads
+        dh = cfg.d_model // nh
+        return {k: jnp.zeros((P, n_slabs, nh, dh), jnp.float32)
+                for k in ("c", "n", "m", "h")}
+    raise ValueError(slot)

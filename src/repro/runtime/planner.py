@@ -50,8 +50,9 @@ from repro.core.pipeline import HwSpec, TPU_V5E, plan_matmul_blocks
 
 __all__ = [
     "MatmulBlocks", "AttentionBlocks", "KVPagePlan", "FusedDecodePlan",
+    "StateReservation",
     "plan_matmul", "plan_attention", "plan_kv_pages", "plan_seq_pages",
-    "plan_resume_pages",
+    "plan_resume_pages", "plan_seq_state",
     "plan_fused_decode", "fused_decode_key", "matmul_candidates",
     "autotune_enabled", "measured_best", "measured_plan",
     "clear_plan_cache", "DEFAULT_BM", "VMEM_BUDGET_FRACTION",
@@ -364,6 +365,38 @@ def plan_resume_pages(n_written: int, n_total: int,
         raise ValueError((n_written, n_total, page_size))
     return (plan_seq_pages(n_total, page_size),
             plan_seq_pages(n_written, page_size))
+
+
+@dataclasses.dataclass(frozen=True)
+class StateReservation:
+    """Per-sequence admission footprint across the StateCache regions:
+    ``pages`` of token-paged KV (fresh pages after prefix discount),
+    ``slabs`` of recurrent SSM state (0 or 1 — one slab covers every SSM
+    slot x period), ``cross`` read-only encoder-output KV entries (0 or 1;
+    a prefix-index hit on the frames key costs 0 fresh entries, but the
+    reservation bills the miss case — admission is worst-case, like
+    pages)."""
+    pages: int
+    slabs: int
+    cross: int
+
+
+def plan_seq_state(n_tokens: int, page_size: int, *,
+                   shared_tokens: int = 0, needs_pages: bool = True,
+                   needs_slab: bool = False,
+                   needs_cross: bool = False) -> StateReservation:
+    """Admission reservation for one sequence under the unified
+    state-cache: the ``plan_seq_pages`` token->page model for the
+    attention slots (0 pages when the pattern has none — pure-SSM models
+    run pageless), plus one slab when any SSM slot needs recurrent state,
+    plus one cross entry when the model decodes against encoder output.
+    The page/slab/cross split is what ``StateCache.allocate`` checks
+    all-or-nothing at admission."""
+    pages = plan_seq_pages(n_tokens, page_size,
+                           shared_tokens=shared_tokens) if needs_pages \
+        else 0
+    return StateReservation(pages=pages, slabs=int(bool(needs_slab)),
+                            cross=int(bool(needs_cross)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,9 @@
 from .engine import Request, ServeEngine
-from .kv_cache import PagePool, kv_bytes_per_token, pool_bytes
+from .kv_cache import (PagePool, StateCache, cross_kv_bytes_per_seq,
+                       kv_bytes_per_token, pool_bytes,
+                       ssm_state_bytes_per_seq)
 from .spec import PromptLookupDrafter
 
-__all__ = ["Request", "ServeEngine", "PagePool", "kv_bytes_per_token",
-           "pool_bytes", "PromptLookupDrafter"]
+__all__ = ["Request", "ServeEngine", "PagePool", "StateCache",
+           "kv_bytes_per_token", "pool_bytes", "ssm_state_bytes_per_seq",
+           "cross_kv_bytes_per_seq", "PromptLookupDrafter"]

@@ -5,18 +5,28 @@ production meshes.
 
 Two KV layouts (docs/SERVING.md has the full lifecycle):
 
-* **paged** (default for attention-only patterns): the KV cache is a fixed
-  pool of pages (serving/kv_cache.py); admission is page-availability-based
-  — a request is admitted when the pool can cover its worst-case footprint,
-  otherwise it waits in the queue. Prompts stream through **chunked
-  prefill** (planner/env-sized chunks, one chunk per engine tick per slot,
-  interleaved with decode steps of already-running sequences), and decode
-  attends through the block table via the paged-attention kernel. Memory
-  scales with tokens in flight, not ``batch_slots x max_seq``.
+* **paged** (the default for every architecture): serving state lives in
+  a unified **StateCache** (serving/kv_cache.py) with three regions under
+  one budget — token-paged KV for attn/xdec mixers, fixed-size **slabs**
+  of recurrent state for SSM mixers (mamba/mlstm/slstm — one slab per
+  live sequence covering every SSM slot x period), and a read-only
+  shared **cross** region holding encoder-output K/V keyed by a frames
+  hash (enc-dec: repeated inputs reuse the whole encoder pass). The
+  layer pattern is the routing unit: jamba's attention layers page while
+  its mamba layers slab; pure-SSM patterns run pageless. Admission is
+  all-or-nothing across regions — a request is admitted when the cache
+  covers its worst-case footprint, otherwise it waits in the queue.
+  Prompts stream through **chunked prefill** (planner/env-sized chunks,
+  one chunk per engine tick per slot, interleaved with decode steps of
+  already-running sequences), and decode attends through the block table
+  via the paged-attention kernel. Memory scales with tokens + sequences
+  in flight, not ``batch_slots x max_seq``.
 
-* **dense** (SSM/hybrid/enc-dec patterns, M-RoPE): the original per-slot
-  ``(B, Hkv, max_seq, dh)`` cache; prompts pad to the slot length at
-  admission and decode runs in lockstep.
+* **dense**: the original per-slot ``(B, Hkv, max_seq, dh)`` cache (plus
+  per-slot recurrent state / cross-KV blocks where the pattern has
+  them); prompts pad to the slot length at admission and decode runs in
+  lockstep. Kept as the differential-test baseline for every
+  architecture.
 
 The paged layout optionally shares KV pages across requests
 (``prefix_cache=True`` / ``--prefix-cache`` / ``REPRO_PREFIX_CACHE=1``):
@@ -58,6 +68,7 @@ submit order or which other requests share the batch.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import os
 import time
 from typing import Optional
@@ -67,10 +78,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.nn.layers import quantize_params
 from repro.runtime import Runtime, planner
-from repro.serving.kv_cache import PagePool, kv_bytes_per_token
+from repro.serving.kv_cache import (StateCache, cross_kv_bytes_per_seq,
+                                    kv_bytes_per_token,
+                                    ssm_state_bytes_per_seq)
 from repro.serving.spec import DEFAULT_SPEC_K, PromptLookupDrafter
 
 __all__ = ["Request", "ServeEngine"]
@@ -97,6 +111,11 @@ class Request:
     #: admit first and may preempt strictly-lower-priority residents;
     #: ties break FIFO by submit order. The FIFO scheduler ignores it.
     priority: int = 0
+    #: encoder input for enc-dec models: (S_enc, D) frame embeddings
+    #: (the audio conv frontend is stubbed upstream). Required when
+    #: cfg.enc_dec; identical frames across requests share one encoded
+    #: cross-KV entry in the state cache's cross region.
+    frames: Optional[np.ndarray] = None
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
@@ -147,26 +166,56 @@ class ServeEngine:
         # base for per-request sampling keys (Request.seed overrides)
         self._base_key = jax.random.PRNGKey(seed)
 
+        # layer pattern is the routing unit for the unified state cache:
+        # attn/xdec mixers page token KV, SSM mixers (mamba/mlstm/slstm)
+        # pin one fixed-size slab per live sequence, enc-dec adds a
+        # read-only shared cross region. For enc-dec models the DECODER
+        # pattern is what holds serving state.
+        self._decode_cfg = encdec_mod.dec_cfg(cfg) if cfg.enc_dec else cfg
+        mixers = {s.split("+")[0] for s in self._decode_cfg.pattern}
+        self._has_pages = bool(mixers & {"attn", "xdec"})
+        self._has_slab = bool(mixers & {"mamba", "mlstm", "slstm"})
+        self._has_cross = bool(cfg.enc_dec)
+
         if kv_layout == "auto":
-            kv_layout = "paged" if self._pageable() else "dense"
-        if kv_layout == "paged" and not self._pageable():
+            # every supported pattern serves paged now (SSM, hybrid,
+            # enc-dec, M-RoPE included); dense remains as the
+            # differential-test baseline
+            kv_layout = "paged"
+        if kv_layout not in ("paged", "dense"):
             raise ValueError(
-                f"kv_layout='paged' needs an attention-only pattern without "
-                f"M-RoPE; {cfg.name} has pattern={cfg.pattern}")
+                f"kv_layout must be 'paged', 'dense' or 'auto', "
+                f"got {kv_layout!r}")
         self.kv_layout = kv_layout
 
-        # shared-prefix KV page reuse (paged only). None = read the env
-        # default; an env-enabled cache degrades silently to off for a
-        # dense engine, an explicit True there is a caller error.
+        # shared-prefix KV page reuse (paged, token-KV-only patterns).
+        # None = read the env default; an env-enabled cache degrades
+        # silently where unsupported, an explicit True there is a caller
+        # error with the actual failing predicate(s) enumerated.
         explicit_prefix = prefix_cache is not None
         if prefix_cache is None:
             prefix_cache = os.environ.get(
                 "REPRO_PREFIX_CACHE", "").lower() in ("1", "true")
-        if prefix_cache and kv_layout != "paged":
+        prefix_gaps = []
+        if kv_layout != "paged":
+            prefix_gaps.append("kv_layout='dense' — per-slot rows, "
+                               "nothing to share")
+        if self._has_slab:
+            prefix_gaps.append(
+                f"recurrent mixer(s) {self._slab_mixers()} in "
+                f"pattern={self._decode_cfg.pattern} — slab state is "
+                "per-sequence, not per-page")
+        if self._has_cross:
+            prefix_gaps.append(
+                "enc_dec=True — decoder KV depends on the encoder "
+                "output, so prompt pages are not shareable by token "
+                "content (the cross region already shares the encoder "
+                "pass by frames)")
+        if prefix_cache and prefix_gaps:
             if explicit_prefix:
                 raise ValueError(
-                    "prefix_cache=True needs kv_layout='paged' — the dense "
-                    "layout has per-slot rows, nothing to share")
+                    "prefix_cache=True is unsupported here: "
+                    + "; ".join(prefix_gaps))
             prefix_cache = False
         self.prefix_cache = bool(prefix_cache)
 
@@ -187,12 +236,20 @@ class ServeEngine:
         explicit_spec = spec_decode is not None or spec_k is not None
         if spec_decode is None:
             spec_decode = env_k > 0 or spec_k is not None
-        if spec_decode and kv_layout != "paged":
+        spec_gaps = []
+        if kv_layout != "paged":
+            spec_gaps.append("kv_layout='dense' — the verify step scores "
+                             "the draft window through the paged chunk "
+                             "path")
+        if self._has_slab:
+            spec_gaps.append(
+                f"recurrent mixer(s) {self._slab_mixers()} in "
+                f"pattern={self._decode_cfg.pattern} — slab updates are "
+                "destructive, a rejected draft tail cannot roll back")
+        if spec_decode and spec_gaps:
             if explicit_spec:
-                raise ValueError(
-                    "spec_decode needs kv_layout='paged' — the verify "
-                    "step scores the draft window through the paged chunk "
-                    "path")
+                raise ValueError("spec_decode is unsupported here: "
+                                 + "; ".join(spec_gaps))
             spec_decode = False
         if spec_decode:
             self.spec_k = (spec_k if spec_k is not None
@@ -303,12 +360,10 @@ class ServeEngine:
         else:
             self._init_dense()
 
-    def _pageable(self) -> bool:
-        # kv_quant no longer excludes paging: quantized pools store
-        # codes+scale pages and decode through the fused-dequant kernel
-        return (all(s.split("+")[0] == "attn" for s in self.cfg.pattern)
-                and self.cfg.mrope_sections is None
-                and not self.cfg.enc_dec)
+    def _slab_mixers(self) -> list[str]:
+        """The recurrent mixer kinds present in the decode pattern."""
+        return sorted({s.split("+")[0] for s in self._decode_cfg.pattern}
+                      & {"mamba", "mlstm", "slstm"})
 
     # -- layout-specific setup ----------------------------------------------
 
@@ -316,6 +371,18 @@ class ServeEngine:
         # cfg and rt are frozen/hashable and ride as *static* jit arguments:
         # an engine whose Runtime is replaced by an equal-valued copy reuses
         # the compiled steps (no retrace — tests/test_runtime.py)
+        if self.cfg.enc_dec:
+            self._decode = jax.jit(encdec_mod.encdec_decode_step,
+                                   static_argnums=(4, 5),
+                                   donate_argnums=(3,))
+            # encoder + decoder-prompt prefill, one request at a time;
+            # frames ride as the extra leading array argument
+            self._prefill_one = jax.jit(encdec_mod.encdec_prefill,
+                                        static_argnums=(4, 5))
+            self.caches = encdec_mod.encdec_init_caches(
+                self.cfg, self.batch_slots, self.max_seq,
+                dtype=self.kv_cache_dtype, kv_quant=self.rt.kv_quant)
+            return
         self._decode = jax.jit(lm_mod.lm_decode_step, static_argnums=(4, 5),
                                donate_argnums=(3,))
         # per-slot position prefill: tokens padded to max_prompt, true
@@ -329,21 +396,35 @@ class ServeEngine:
 
     def _init_paged(self, page_size, pool_pages, prefill_chunk):
         cfg = self.cfg
-        rep = cfg.n_heads // cfg.n_kv_heads
-        plan = planner.plan_kv_pages(
-            cfg.n_kv_heads, cfg.dh, rep=rep,
-            act_bytes=self.kv_cache_dtype.itemsize,
-            kv_scheme=self.kv_scheme)
-        self.page_size = min(page_size or plan.page_size, self.max_seq)
-        self.pages_per_seq = -(-self.max_seq // self.page_size)
-        # default pool = the dense engine's worst case, so paged-vs-dense
-        # comparisons start from equal budgets; pass a smaller pool to get
-        # admission backpressure (tests/test_serving.py exercises this)
-        self.pool = PagePool(pool_pages
-                             or self.batch_slots * self.pages_per_seq,
-                             self.page_size,
-                             host_pages=self.host_pages,
-                             cache_pages=self.prefix_cache_pages)
+        dcfg = self._decode_cfg
+        if self._has_pages:
+            rep = dcfg.n_heads // dcfg.n_kv_heads
+            plan = planner.plan_kv_pages(
+                dcfg.n_kv_heads, dcfg.dh, rep=rep,
+                act_bytes=self.kv_cache_dtype.itemsize,
+                kv_scheme=self.kv_scheme)
+            self.page_size = min(page_size or plan.page_size, self.max_seq)
+            self.pages_per_seq = -(-self.max_seq // self.page_size)
+            # default pool = the dense engine's worst case, so
+            # paged-vs-dense comparisons start from equal budgets; pass a
+            # smaller pool to get admission backpressure
+            # (tests/test_serving.py exercises this)
+            n_pages = pool_pages or self.batch_slots * self.pages_per_seq
+        else:
+            # pageless (pure-SSM pattern): no mixer writes token KV, the
+            # pool degenerates to the slab region only
+            self.page_size = 1
+            self.pages_per_seq = 0
+            n_pages = 0
+        # one slab per live sequence covers every SSM slot x period; one
+        # cross entry per live *distinct input* (shared across sequences)
+        self._n_slabs = self.batch_slots if self._has_slab else 0
+        self._n_cross = self.batch_slots if self._has_cross else 0
+        self.pool = StateCache(n_pages, self.page_size,
+                               n_slabs=self._n_slabs,
+                               n_cross=self._n_cross,
+                               host_pages=self.host_pages,
+                               cache_pages=self.prefix_cache_pages)
         self.prefill_chunk = (prefill_chunk
                               or int(os.environ.get("REPRO_PREFILL_CHUNK",
                                                     0))
@@ -352,21 +433,31 @@ class ServeEngine:
             raise ValueError(
                 f"prefill_chunk must be >= 1, got {self.prefill_chunk} "
                 "(check REPRO_PREFILL_CHUNK)")
-        self.caches = lm_mod.paged_init_caches(cfg, self.pool.n_pages,
-                                               self.page_size,
-                                               dtype=self.kv_cache_dtype,
-                                               kv_quant=self.rt.kv_quant)
-        self._paged_step = jax.jit(lm_mod.lm_paged_step,
-                                   static_argnums=(6, 7),
-                                   donate_argnums=(5,))
+        if cfg.enc_dec:
+            self.caches = encdec_mod.encdec_paged_init_caches(
+                cfg, self.pool.n_pages, self.page_size,
+                dtype=self.kv_cache_dtype, kv_quant=self.rt.kv_quant,
+                n_slabs=self._n_slabs, n_cross=self._n_cross)
+            step_fn = encdec_mod.encdec_paged_step
+            verify_fn = encdec_mod.encdec_paged_verify
+            fused_fn = encdec_mod.encdec_paged_fused_step
+        else:
+            self.caches = lm_mod.paged_init_caches(
+                cfg, self.pool.n_pages, self.page_size,
+                dtype=self.kv_cache_dtype, kv_quant=self.rt.kv_quant,
+                n_slabs=self._n_slabs, n_cross=self._n_cross)
+            step_fn = lm_mod.lm_paged_step
+            verify_fn = lm_mod.lm_paged_verify
+            fused_fn = lm_mod.lm_paged_fused_step
+        self._paged_step = jax.jit(step_fn, static_argnums=(7, 8),
+                                   donate_argnums=(6,))
         if self.fused_decode:
             # decode megakernel tick: ONE compiled function serves both
             # tick shapes — plain decode (W == 1) and the spec verify
             # window (W == spec_k + 1) — and inside it every layer's
             # attention is one paged_decode_ragged launch
-            self._fused_step = jax.jit(lm_mod.lm_paged_fused_step,
-                                       static_argnums=(6, 7),
-                                       donate_argnums=(5,))
+            self._fused_step = jax.jit(fused_fn, static_argnums=(7, 8),
+                                       donate_argnums=(6,))
         if self.spec_k:
             if not self.fused_decode:
                 # multi-token verify: same paged step, logits at every
@@ -374,9 +465,9 @@ class ServeEngine:
                 # K+1 window, ragged rows ride on n_valid like prefill
                 # chunks do). The fused path scores windows through
                 # _fused_step instead.
-                self._paged_verify = jax.jit(lm_mod.lm_paged_verify,
-                                             static_argnums=(6, 7),
-                                             donate_argnums=(5,))
+                self._paged_verify = jax.jit(verify_fn,
+                                             static_argnums=(7, 8),
+                                             donate_argnums=(6,))
             self.drafter = PromptLookupDrafter()
         # copy-on-write page duplication; src/dst ride as traced scalars
         # so the one compile covers every page pair
@@ -388,11 +479,33 @@ class ServeEngine:
         self._gather_pages = jax.jit(lm_mod.paged_gather_pages)
         self._scatter_pages = jax.jit(lm_mod.paged_scatter_pages,
                                       donate_argnums=(0,))
+        if self._has_slab:
+            # slab snapshot/restore (preemption) and the fresh-admission
+            # zero; the slab index rides as a traced scalar
+            self._gather_slabs = jax.jit(lm_mod.paged_gather_slabs)
+            self._scatter_slabs = jax.jit(lm_mod.paged_scatter_slabs,
+                                          donate_argnums=(0,))
+            self._reset_slabs = jax.jit(lm_mod.paged_reset_slabs,
+                                        donate_argnums=(0,))
+        if self._has_cross:
+            # encoder pass + per-slot cross-KV projection, run once per
+            # DISTINCT frames (the cross region shares entries by key)
+            self._encode_cross = jax.jit(encdec_mod.encdec_cross_kv,
+                                         static_argnums=(2, 3))
+            self._fill_cross = jax.jit(lm_mod.paged_fill_cross,
+                                       donate_argnums=(0,))
+        # per-slot (slab, cross) indices for the step functions;
+        # out-of-range sentinels mean "no slab / no cross entry"
+        self._state_idx = np.tile(
+            np.array([self._n_slabs, self._n_cross], np.int32),
+            (self.batch_slots, 1))
         self.block_tables = np.zeros(
-            (self.batch_slots, self.pages_per_seq), np.int32)
+            (self.batch_slots, max(self.pages_per_seq, 1)), np.int32)
         # per-slot prefill progress: tokens of the prompt already fed;
         # -1 means the slot is decoding
         self._fed = np.full(self.batch_slots, -1, np.int64)
+        # frames hash per in-flight rid (cross-region key), computed once
+        self._frames_keys: dict[int, bytes] = {}
         # prefix-cache work counters (metrics(); reset_metrics() zeroes)
         self._prefix_hits = 0
         self._prefill_skipped = 0
@@ -408,12 +521,49 @@ class ServeEngine:
         """Tokens the sequence can ever hold — admission reserves this."""
         return len(req.prompt) + req.max_new_tokens
 
+    def _frames_key(self, req: Request) -> bytes | None:
+        """Content hash of the request's frames — the cross-region key.
+        Identical frames hash equal, so concurrent requests decoding the
+        same input share one encoded entry. Cached per rid: admission
+        retries must not re-hash 1500-frame inputs every tick."""
+        if not self._has_cross:
+            return None
+        key = self._frames_keys.get(req.rid)
+        if key is None:
+            f = np.ascontiguousarray(req.frames, np.float32)
+            h = hashlib.blake2b(f.tobytes(), digest_size=16)
+            h.update(repr(f.shape).encode())
+            key = self._frames_keys[req.rid] = h.digest()
+        return key
+
+    def _sync_state_idx(self, slot: int, rid: int):
+        """Point the slot's (slab, cross) row at the pool's current
+        assignment (sentinels where the pattern has no such region)."""
+        slab = self.pool.seq_slab(rid)
+        cross = self.pool.seq_cross(rid)
+        self._state_idx[slot, 0] = self._n_slabs if slab is None else slab
+        self._state_idx[slot, 1] = (self._n_cross if cross is None
+                                    else cross)
+
+    def _set_block_row(self, slot: int, rid: int):
+        if self.pages_per_seq:
+            self.block_tables[slot] = self.pool.block_table_row(
+                rid, self.pages_per_seq)
+
     def submit(self, req: Request):
         if len(req.prompt) < 1 or req.max_new_tokens < 1:
             raise ValueError(
                 f"request {req.rid}: needs a non-empty prompt and "
                 f"max_new_tokens >= 1 (got {len(req.prompt)}, "
                 f"{req.max_new_tokens})")
+        if self.cfg.enc_dec and req.frames is None:
+            raise ValueError(
+                f"request {req.rid}: {self.cfg.name} is enc-dec — every "
+                "request needs frames=(S_enc, D) encoder input")
+        if not self.cfg.enc_dec and req.frames is not None:
+            raise ValueError(
+                f"request {req.rid}: frames= given but {self.cfg.name} "
+                "has no encoder")
         if self._worst_case_tokens(req) > self.max_seq:
             raise ValueError(
                 f"request {req.rid}: prompt ({len(req.prompt)}) + "
@@ -426,7 +576,7 @@ class ServeEngine:
             # dict; a duplicate would KeyError mid-run (paged) or
             # silently overwrite another request's output (dense)
             raise ValueError(f"request id {req.rid} already in flight")
-        if self.kv_layout == "paged":
+        if self.kv_layout == "paged" and self._has_pages:
             # worst-case reservation (planner-owned model): assume no
             # shared prefix — the index is volatile, so a match visible
             # now may be evicted before this request reaches admission
@@ -530,6 +680,11 @@ class ServeEngine:
             st.prefix_lookups = 0
             st.prefix_hits = 0
             st.prefix_evictions = 0
+            st.peak_slabs_in_use = st.slabs_in_use
+            st.peak_cross_in_use = st.cross_in_use
+            st.cross_lookups = 0
+            st.cross_hits = 0
+            st.cross_evictions = 0
             self._prefix_hits = 0
             self._prefill_skipped = 0
             self._cow_copies = 0
@@ -539,12 +694,22 @@ class ServeEngine:
         lat = [r.t_done - r.t_enqueue for r in self.finished]
         ttft = [r.t_first_token - r.t_enqueue for r in self.finished]
         # bytes follow the layout actually allocated: cache dtype, or the
-        # codes+scale quantized layout when rt.kv_quant is set
-        per_tok = kv_bytes_per_token(self.cfg, self.kv_cache_dtype,
+        # codes+scale quantized layout when rt.kv_quant is set. The
+        # decoder pattern holds the serving state, so byte helpers see
+        # the decode-side cfg; slab/cross regions bill per sequence /
+        # per distinct input rather than per token.
+        per_tok = kv_bytes_per_token(self._decode_cfg, self.kv_cache_dtype,
                                      kv_scheme=self.kv_scheme)
+        slab_bytes = ssm_state_bytes_per_seq(self._decode_cfg,
+                                             self.kv_cache_dtype)
+        cross_bytes = cross_kv_bytes_per_seq(self._decode_cfg,
+                                             self.kv_cache_dtype)
         if self.kv_layout == "paged":
             st = self.pool.stats
             peak_kv = st.peak_pages_in_use * self.page_size * per_tok
+            peak_state = (peak_kv
+                          + st.peak_slabs_in_use * slab_bytes
+                          + st.peak_cross_in_use * cross_bytes)
             # offloaded pages carry the same per-token layout on host
             page_bytes = self.page_size * per_tok
             paged = {"page_size": self.page_size,
@@ -554,6 +719,20 @@ class ServeEngine:
                      "admission_denials":
                          st.admission_denials,
                      "prefill_chunk": self.prefill_chunk,
+                     # state-cache regions beyond token KV: SSM slabs
+                     # (one per live sequence) and cross entries (one
+                     # per live distinct encoder input)
+                     "n_slabs": st.n_slabs,
+                     "slabs_in_use": st.slabs_in_use,
+                     "peak_slabs": st.peak_slabs_in_use,
+                     "slab_bytes_per_seq": int(slab_bytes),
+                     "n_cross": st.n_cross,
+                     "cross_in_use": st.cross_in_use,
+                     "peak_cross": st.peak_cross_in_use,
+                     "cross_bytes_per_entry": int(cross_bytes),
+                     "cross_lookups": st.cross_lookups,
+                     "cross_hits": st.cross_hits,
+                     "cross_evictions": st.cross_evictions,
                      # continuous-batching scheduler: preempt/resume
                      # traffic and the two-tier memory picture
                      "preemptions": self._preemptions,
@@ -588,7 +767,12 @@ class ServeEngine:
                          self._spec_accepted / self._spec_proposed
                          if self._spec_proposed else 0.0}
         else:
+            # dense bills every slot its worst case up front: max_seq of
+            # token KV plus the full recurrent slab and a private cross
+            # block per slot, whether or not a request ever lands there
             peak_kv = self.batch_slots * self.max_seq * per_tok
+            peak_state = self.batch_slots * (self.max_seq * per_tok
+                                             + slab_bytes + cross_bytes)
             paged = {}
         return {
             "kv_layout": self.kv_layout,
@@ -618,6 +802,9 @@ class ServeEngine:
             "occupancy_peak": float(np.max(self._occ_samples))
             if self._occ_samples else 0.0,
             "peak_kv_bytes": int(peak_kv),
+            # the unified bill: token KV + SSM slabs + cross entries —
+            # comparable across layouts and architectures
+            "peak_state_bytes": int(peak_state),
             **paged,
         }
 
@@ -716,11 +903,14 @@ class ServeEngine:
         shared, cow_src, matched = ([], None, 0)
         if self.prefix_cache:
             shared, cow_src, matched = self._match_prefix(req)
-        pages = self.pool.allocate(req.rid,
-                                   self._worst_case_tokens(req),
-                                   shared_prefix=shared)
-        if pages is None:
-            return False
+        kv_tokens = (self._worst_case_tokens(req)
+                     if self._has_pages else 0)
+        pages = self.pool.allocate(req.rid, kv_tokens,
+                                   shared_prefix=shared,
+                                   need_slab=self._has_slab,
+                                   cross_key=self._frames_key(req))
+        if pages is None:                    # NOT truthiness: a pageless
+            return False                     # success returns []
         if cow_src is not None:
             # private copy of the partially-reused last page; the
             # re-run final token overwrites its own (identical) KV
@@ -731,12 +921,30 @@ class ServeEngine:
         if matched:
             self._prefix_hits += 1
             self._prefill_skipped += matched
+        if self._has_slab:
+            # a fresh sequence starts from zero recurrent state; the
+            # slab index is recycled, so the zero is explicit
+            self.caches = self._reset_slabs(
+                self.caches, jnp.int32(self.pool.seq_slab(req.rid)))
+        if self._has_cross and self.pool.consume_cross_fresh(req.rid):
+            # cross-region miss: run the encoder + per-slot K/V
+            # projection once and fill the claimed entry. A hit (same
+            # frames as a live or cached entry) skips this entirely —
+            # the whole encoder pass is reused.
+            entries = self._encode_cross(
+                self.params,
+                jnp.asarray(req.frames, jnp.float32)[None],
+                self.cfg, self.rt)
+            self._model_calls += 1
+            self.caches = self._fill_cross(
+                self.caches, jnp.int32(self.pool.seq_cross(req.rid)),
+                entries)
         self.queue.remove(req)
         self.slot_req[slot] = req
         self.slot_pos[slot] = matched
         self._fed[slot] = matched
-        self.block_tables[slot] = self.pool.block_table_row(
-            req.rid, self.pages_per_seq)
+        self._set_block_row(slot, req.rid)
+        self._sync_state_idx(slot, req.rid)
         if self.spec_k:
             # the drafter indexes the FULL prompt (matched prefix
             # included) — sharing changes where KV bytes live, not
@@ -788,15 +996,30 @@ class ServeEngine:
         req = self.slot_req[slot]
         n_written = int(self.slot_pos[slot])
         fed = int(self._fed[slot])
-        _, n_keep = planner.plan_resume_pages(
-            n_written, self._worst_case_tokens(req), self.page_size)
-        payload = (self._snapshot_pages(self.pool.seq_pages(req.rid)[:n_keep])
-                   if n_keep else None)
+        if self._has_pages:
+            _, n_keep = planner.plan_resume_pages(
+                n_written, self._worst_case_tokens(req), self.page_size)
+        else:
+            n_keep = 0
+        page_payload = (
+            self._snapshot_pages(self.pool.seq_pages(req.rid)[:n_keep])
+            if n_keep else None)
+        slab_payload = None
+        if self._has_slab:
+            # the slab is the sequence's entire recurrent state — O(1)
+            # in written tokens, always snapshotted whole
+            slab_payload = jax.device_get(self._gather_slabs(
+                self.caches, jnp.int32(self.pool.seq_slab(req.rid))))
+        payload = ((page_payload, slab_payload)
+                   if page_payload is not None or slab_payload is not None
+                   else None)
         if self.pool.offload(req.rid, n_keep, payload) is None:
             return False                    # host tier full
-        if payload is not None:
-            self._offload_bytes += sum(
-                leaf.nbytes for leaf in jax.tree_util.tree_leaves(payload))
+        for part in (page_payload, slab_payload):
+            if part is not None:
+                self._offload_bytes += sum(
+                    leaf.nbytes
+                    for leaf in jax.tree_util.tree_leaves(part))
         req._resume = (n_written, fed)
         req.preemptions += 1
         self._preemptions += 1
@@ -804,6 +1027,7 @@ class ServeEngine:
         self.block_tables[slot] = 0
         self.slot_pos[slot] = 0
         self._fed[slot] = -1
+        self._state_idx[slot] = (self._n_slabs, self._n_cross)
         if self.spec_k:
             # the n-gram index rebuilds deterministically from
             # prompt + output at resume — nothing to keep
@@ -817,22 +1041,36 @@ class ServeEngine:
         host snapshot into the new pages, and re-enter the tick loop at
         the exact (write cursor, prefill progress) it was evicted at."""
         n_written, fed = req._resume
-        res = self.pool.onload(req.rid, self._worst_case_tokens(req))
+        kv_tokens = (self._worst_case_tokens(req)
+                     if self._has_pages else 0)
+        res = self.pool.onload(req.rid, kv_tokens)
         if res is None:
-            return False                    # device pages still short
+            return False                    # device capacity still short
         pages, payload = res
-        if payload is not None:
-            self._restore_pages(pages, payload)
+        page_payload, slab_payload = (payload if payload is not None
+                                      else (None, None))
+        if page_payload is not None:
+            self._restore_pages(pages, page_payload)
             self._onload_bytes += sum(
-                leaf.nbytes for leaf in jax.tree_util.tree_leaves(payload))
+                leaf.nbytes
+                for leaf in jax.tree_util.tree_leaves(page_payload))
+        if slab_payload is not None:
+            # the reacquired slab index may differ from the one held at
+            # offload — scatter wherever the pool now points
+            self.caches = self._scatter_slabs(
+                self.caches, jnp.int32(self.pool.seq_slab(req.rid)),
+                slab_payload)
+            self._onload_bytes += sum(
+                leaf.nbytes
+                for leaf in jax.tree_util.tree_leaves(slab_payload))
         self.queue.remove(req)
         req._resume = None
         self._resumes += 1
         self.slot_req[slot] = req
         self.slot_pos[slot] = n_written
         self._fed[slot] = fed
-        self.block_tables[slot] = self.pool.block_table_row(
-            req.rid, self.pages_per_seq)
+        self._set_block_row(slot, req.rid)
+        self._sync_state_idx(slot, req.rid)
         if self.spec_k:
             # deterministic rebuild: the incremental index over
             # prompt + emitted output is a pure function of both
@@ -852,8 +1090,9 @@ class ServeEngine:
         would evict work without admitting anyone. Equal priorities never
         preempt: that is what keeps cb admission FIFO-compatible (and
         livelock-free — the highest-priority resident always runs)."""
-        need = planner.plan_seq_pages(self._worst_case_tokens(cand),
-                                      self.page_size)
+        need = (planner.plan_seq_pages(self._worst_case_tokens(cand),
+                                       self.page_size)
+                if self._has_pages else 0)
         victims = sorted(
             (s for s, r in enumerate(self.slot_req)
              if r is not None and r.priority < cand.priority),
@@ -866,9 +1105,13 @@ class ServeEngine:
         for s in victims:
             if gain >= need and (free_slot or chosen):
                 break
-            _, n_keep = planner.plan_resume_pages(
-                int(self.slot_pos[s]),
-                self._worst_case_tokens(self.slot_req[s]), self.page_size)
+            if self._has_pages:
+                _, n_keep = planner.plan_resume_pages(
+                    int(self.slot_pos[s]),
+                    self._worst_case_tokens(self.slot_req[s]),
+                    self.page_size)
+            else:
+                n_keep = 0
             if (self.pool.host_pages is not None
                     and self.pool.stats.host_pages_in_use + host_extra
                     + n_keep > self.pool.host_pages):
@@ -925,7 +1168,7 @@ class ServeEngine:
         logits, self.caches = self._paged_step(
             self.params, jnp.asarray(tokens), jnp.asarray(ctx),
             jnp.asarray(self.block_tables), jnp.asarray(n_valid),
-            self.caches, self.cfg, self.rt)
+            jnp.asarray(self._state_idx), self.caches, self.cfg, self.rt)
         self._model_calls += 1
         logits = np.asarray(logits)
         for i in rows:
@@ -983,7 +1226,7 @@ class ServeEngine:
         logits, self.caches = self._paged_step(
             self.params, jnp.asarray(tokens), jnp.asarray(ctx),
             jnp.asarray(self.block_tables), jnp.asarray(n_valid),
-            self.caches, self.cfg, self.rt)
+            jnp.asarray(self._state_idx), self.caches, self.cfg, self.rt)
         self._model_calls += 1
         logits = np.asarray(logits)
         for i in active:
@@ -1034,7 +1277,7 @@ class ServeEngine:
         logits, self.caches = self._fused_step(
             self.params, jnp.asarray(tokens), jnp.asarray(ctx),
             jnp.asarray(self.block_tables), jnp.asarray(n_valid),
-            self.caches, self.cfg, self.rt)
+            jnp.asarray(self._state_idx), self.caches, self.cfg, self.rt)
         self._model_calls += 1
         logits = np.asarray(logits)                  # (B, W, V)
         for i in active:
@@ -1090,7 +1333,7 @@ class ServeEngine:
         logits, self.caches = self._paged_verify(
             self.params, jnp.asarray(tokens), jnp.asarray(ctx),
             jnp.asarray(self.block_tables), jnp.asarray(n_valid),
-            self.caches, self.cfg, self.rt)
+            jnp.asarray(self._state_idx), self.caches, self.cfg, self.rt)
         self._model_calls += 1
         logits = np.asarray(logits)                  # (B, W, V)
         for i in active:
@@ -1165,10 +1408,15 @@ class ServeEngine:
         self.finished.append(req)
         self.slot_req[slot] = None
         if self.kv_layout == "paged":
-            self.pool.release(req.rid)      # zero-ref pages recycle now
+            # release recycles zero-ref pages, returns the slab to the
+            # free list and drops the cross reference (a zero-ref cross
+            # entry stays indexed — cached-free, revivable by key)
+            self.pool.release(req.rid)
             self.block_tables[slot] = 0
             self._fed[slot] = -1
+            self._state_idx[slot] = (self._n_slabs, self._n_cross)
             self._prompt_keys.pop(req.rid, None)
+            self._frames_keys.pop(req.rid, None)
             if self.spec_k:
                 self.drafter.drop(req.rid)
 
@@ -1182,12 +1430,22 @@ class ServeEngine:
                 # prefill this slot: run prompt through a single-row batch,
                 # then splice its caches into the engine batch at `slot`
                 tok = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                row_caches = lm_mod.init_caches(self.cfg, 1, self.max_seq,
-                                                dtype=self.kv_cache_dtype,
-                                                kv_quant=self.rt.kv_quant)
-                logits, row_caches = self._prefill_one(self.params, tok,
-                                                       row_caches, self.cfg,
-                                                       self.rt)
+                if self.cfg.enc_dec:
+                    row_caches = encdec_mod.encdec_init_caches(
+                        self.cfg, 1, self.max_seq,
+                        dtype=self.kv_cache_dtype,
+                        kv_quant=self.rt.kv_quant)
+                    frames = jnp.asarray(req.frames, jnp.float32)[None]
+                    logits, row_caches = self._prefill_one(
+                        self.params, frames, tok, row_caches, self.cfg,
+                        self.rt)
+                else:
+                    row_caches = lm_mod.init_caches(
+                        self.cfg, 1, self.max_seq,
+                        dtype=self.kv_cache_dtype,
+                        kv_quant=self.rt.kv_quant)
+                    logits, row_caches = self._prefill_one(
+                        self.params, tok, row_caches, self.cfg, self.rt)
                 self._model_calls += 1
                 self.caches = _splice_caches(self.caches, row_caches, slot)
                 self.slot_pos[slot] = len(req.prompt)

@@ -59,48 +59,115 @@ import numpy as np
 from repro.core import spx
 from repro.runtime import planner
 
-__all__ = ["PagePool", "kv_bytes_per_token", "pool_bytes", "PoolStats"]
+__all__ = [
+    "PagePool", "StateCache", "PoolStats", "StateStats",
+    "kv_bytes_per_token", "pool_bytes",
+    "ssm_state_bytes_per_seq", "cross_kv_bytes_per_seq",
+]
 
 
-def _elem_bytes(cache_dtype) -> int:
-    """Element width in bytes from a dtype (or a raw int, kept for the old
-    ``dtype_bytes`` call style)."""
+def _elem_bytes(cache_dtype=None, dtype_bytes: int | None = None) -> int:
+    """Element width in bytes from an explicit dtype OR an explicit byte
+    count — exactly one of the two. A raw int passed as ``cache_dtype`` is
+    rejected (``np.dtype(2)`` would silently parse as float64): byte
+    widths go through ``dtype_bytes=``."""
+    if (cache_dtype is None) == (dtype_bytes is None):
+        raise ValueError(
+            "pass exactly one of cache_dtype= (a dtype such as "
+            "jnp.bfloat16) or dtype_bytes= (an int byte width); got "
+            f"cache_dtype={cache_dtype!r}, dtype_bytes={dtype_bytes!r}")
+    if dtype_bytes is not None:
+        if not isinstance(dtype_bytes, int) or dtype_bytes <= 0:
+            raise ValueError(f"dtype_bytes must be a positive int, got "
+                             f"{dtype_bytes!r}")
+        return dtype_bytes
     if isinstance(cache_dtype, int):
-        return cache_dtype
+        raise ValueError(
+            f"cache_dtype={cache_dtype!r} is a raw int — ambiguous "
+            f"(np.dtype(2) parses as float64, not 2 bytes). Pass a real "
+            f"dtype, or the byte width via dtype_bytes=")
     return int(np.dtype(cache_dtype).itemsize)
 
 
-def kv_bytes_per_token(cfg, cache_dtype=4, *,
+def kv_bytes_per_token(cfg, cache_dtype=None, *,
+                       dtype_bytes: int | None = None,
                        kv_scheme: str | None = None) -> int:
     """Bytes of K+V cache one token occupies across every attention layer.
 
-    ``cfg``: an ArchConfig; ``cache_dtype``: the dtype the cache arrays are
-    actually allocated with (e.g. ``jnp.float32``/``jnp.bfloat16`` — pass
-    whatever went to ``init_caches``/``paged_init_caches``; a raw byte
-    count is accepted for back-compat). ``kv_scheme`` set (any core/spx
-    scheme name) switches to the quantized codes+scale layout: 1 byte of
-    uint8 code per element plus a 4-byte f32 scale per (token, KV head)
-    side — ``cache_dtype`` is then ignored, matching the allocation.
-    Counts attention mixers only — SSM slots carry O(1) state, not
-    per-token KV.
+    ``cfg``: an ArchConfig; ``cache_dtype``: the dtype the cache arrays
+    are actually allocated with (e.g. ``jnp.float32``/``jnp.bfloat16`` —
+    pass whatever went to ``init_caches``/``paged_init_caches``);
+    ``dtype_bytes``: an explicit element byte width, mutually exclusive
+    with ``cache_dtype``. ``kv_scheme`` set (any core/spx scheme name)
+    switches to the quantized codes+scale layout: 1 byte of uint8 code per
+    element plus a 4-byte f32 scale per (token, KV head) side — the dtype
+    arguments are then ignored (and may be omitted), matching the
+    allocation. Counts attention mixers only — SSM slots carry O(1) state
+    (``ssm_state_bytes_per_seq``) and cross-attention KV is per-sequence
+    (``cross_kv_bytes_per_seq``), not per-token.
     """
     n_attn = sum(1 for s in cfg.pattern
                  if s.split("+")[0] in ("attn", "xdec"))
     if kv_scheme is not None:
         per_head = spx.kv_token_side_bytes(cfg.dh)   # codes + f32 scale
     else:
-        per_head = cfg.dh * _elem_bytes(cache_dtype)
+        per_head = cfg.dh * _elem_bytes(cache_dtype, dtype_bytes)
     return 2 * cfg.n_periods * n_attn * cfg.n_kv_heads * per_head
 
 
-def pool_bytes(cfg, n_pages: int, page_size: int, cache_dtype=4, *,
+def pool_bytes(cfg, n_pages: int, page_size: int, cache_dtype=None, *,
+               dtype_bytes: int | None = None,
                kv_scheme: str | None = None) -> int:
     """Total device bytes of the paged K/V pool (all layers) — equal by
     construction to the summed ``.nbytes`` of the arrays
     ``models.lm.paged_init_caches`` allocates for the same geometry
     (regression-tested)."""
-    return n_pages * page_size * kv_bytes_per_token(cfg, cache_dtype,
-                                                    kv_scheme=kv_scheme)
+    return n_pages * page_size * kv_bytes_per_token(
+        cfg, cache_dtype, dtype_bytes=dtype_bytes, kv_scheme=kv_scheme)
+
+
+def ssm_state_bytes_per_seq(cfg, cache_dtype=None, *,
+                            dtype_bytes: int | None = None) -> int:
+    """Bytes of recurrent state one sequence pins across every SSM slot —
+    the per-slab bill of the StateCache slab region. O(1) in sequence
+    length: a mamba slot is a selective-scan ``h`` (f32) plus a conv
+    window, an mLSTM slot is the (C, n, m) matrix-memory triplet (f32)
+    plus a conv window, an sLSTM slot is four per-head f32 vectors.
+    ``cache_dtype``/``dtype_bytes`` size the conv windows (they live in
+    the cache dtype); the scan/cell states are f32 by construction.
+    Returns 0 for attention-only patterns."""
+    mixers = [s.split("+")[0] for s in cfg.pattern]
+    if not any(m in ("mamba", "mlstm", "slstm") for m in mixers):
+        return 0
+    eb = _elem_bytes(cache_dtype, dtype_bytes)
+    di = cfg.ssm_expand * cfg.d_model
+    dc, ds, nh = cfg.ssm_d_conv, cfg.ssm_d_state, cfg.lstm_heads
+    per_period = 0
+    for m in mixers:
+        if m == "mamba":
+            per_period += 4 * di * ds + eb * (dc - 1) * di
+        elif m == "mlstm":
+            dh = di // nh
+            per_period += 4 * (nh * dh * dh + nh * dh + nh) \
+                + eb * (dc - 1) * di
+        elif m == "slstm":
+            per_period += 4 * 4 * nh * (cfg.d_model // nh)
+    return cfg.n_periods * per_period
+
+
+def cross_kv_bytes_per_seq(cfg, cache_dtype=None, *,
+                           dtype_bytes: int | None = None) -> int:
+    """Bytes of read-only cross-attention K+V one sequence references —
+    the per-slot bill of the StateCache cross region (shared across
+    sequences decoding the same input frames, so the *peak* bill is
+    ``peak_cross_in_use`` slots, not one per sequence). Returns 0 for
+    patterns without an ``xdec`` mixer."""
+    n_xdec = sum(1 for s in cfg.pattern if s.split("+")[0] == "xdec")
+    if n_xdec == 0:
+        return 0
+    eb = _elem_bytes(cache_dtype, dtype_bytes)
+    return 2 * cfg.n_periods * n_xdec * cfg.n_kv_heads \
+        * cfg.enc_seq_len * cfg.dh * eb
 
 
 @dataclasses.dataclass
@@ -128,11 +195,12 @@ class PoolStats:
 
     @property
     def occupancy(self) -> float:
-        return self.pages_in_use / self.n_pages
+        return self.pages_in_use / self.n_pages if self.n_pages else 0.0
 
     @property
     def peak_occupancy(self) -> float:
-        return self.peak_pages_in_use / self.n_pages
+        return self.peak_pages_in_use / self.n_pages if self.n_pages \
+            else 0.0
 
 
 class PagePool:
@@ -156,10 +224,15 @@ class PagePool:
     policy: entries survive until the page is physically reused).
     """
 
+    # pure-SSM StateCaches run pageless (n_pages == 0); the plain PagePool
+    # keeps requiring at least one page
+    _min_pages = 1
+    _stats_cls = PoolStats
+
     def __init__(self, n_pages: int, page_size: int, *,
                  host_pages: int | None = None,
                  cache_pages: int | None = None):
-        if n_pages <= 0 or page_size <= 0:
+        if n_pages < self._min_pages or page_size <= 0:
             raise ValueError((n_pages, page_size))
         if host_pages is not None and host_pages < 0:
             raise ValueError(f"host_pages must be >= 0, got {host_pages}")
@@ -185,7 +258,7 @@ class PagePool:
         self._tick = 0
         self._touched: dict[int, int] = {}
         self._denied: set[int] = set()
-        self.stats = PoolStats(n_pages, page_size)
+        self.stats = self._stats_cls(n_pages, page_size)
 
     # -- queries -------------------------------------------------------------
 
@@ -563,3 +636,292 @@ class PagePool:
                               if self._ref[p] == 0)
             assert cached_free <= self.cache_pages, \
                 f"{cached_free} cached-free pages > bound {self.cache_pages}"
+
+
+@dataclasses.dataclass
+class StateStats(PoolStats):
+    """PoolStats plus the slab (recurrent SSM state) and cross
+    (read-only encoder-output KV) region counters. Slabs are exclusive —
+    one per live sequence with SSM slots; cross entries are refcounted and
+    shared across sequences decoding the same input frames, so
+    ``cross_in_use`` counts *distinct* entries."""
+    n_slabs: int = 0
+    slabs_in_use: int = 0
+    peak_slabs_in_use: int = 0
+    n_cross: int = 0
+    cross_in_use: int = 0
+    peak_cross_in_use: int = 0
+    cross_lookups: int = 0          # admissions that needed a cross entry
+    cross_hits: int = 0             # ... served from an existing entry
+    cross_evictions: int = 0        # cached-free cross entries recycled
+
+
+class StateCache(PagePool):
+    """PagePool generalized into a unified state-cache with three region
+    types under one budget, one admission policy, one stats surface:
+
+      * the token-paged KV **page** region inherited from PagePool
+        (attention and decoder-self-attention slots);
+      * a fixed-size **slab** region for recurrent SSM state: one slab per
+        live sequence holds the conv windows and selective-scan/cell
+        states of *every* SSM slot x period (the device arrays are shaped
+        ``(P, n_slabs, ...)`` per state leaf — see
+        ``transformer.slot_init_paged_cache``). Slabs are exclusive
+        (recurrent state is written every step, never shareable),
+        allocated and released atomically with the sequence's pages, and
+        preempt/offload-able: the engine snapshots the slab bytes into the
+        offload payload and the slab returns to the free list;
+      * a refcounted **cross** region of read-only encoder-output KV
+        entries keyed by the input frames (``cross_key``): requests
+        decoding the same audio/image share one entry — the enc-dec
+        analogue of the prefix cache, reusing the *whole encoder pass*
+        across requests. Entries go cached-free on last release (index
+        kept, LRU-evicted only when a fresh admission needs the slot).
+
+    Allocation is all-or-nothing across regions: ``allocate`` first
+    budget-checks the slab and cross needs, then runs the (transactional)
+    page allocation, then commits the slab/cross bookkeeping — a denial in
+    any region leaves every region untouched, so a queued request never
+    holds a slab while waiting for pages or vice versa.
+
+    ``n_pages=0`` is legal (pure-SSM models run pageless: every
+    reservation is 0 pages and ``allocate`` returns ``[]`` — callers must
+    test ``pages is None``, never truthiness).
+    """
+
+    _min_pages = 0
+    _stats_cls = StateStats
+
+    def __init__(self, n_pages: int, page_size: int, *,
+                 n_slabs: int = 0, n_cross: int = 0,
+                 host_pages: int | None = None,
+                 cache_pages: int | None = None):
+        if n_slabs < 0 or n_cross < 0:
+            raise ValueError((n_slabs, n_cross))
+        super().__init__(n_pages, page_size, host_pages=host_pages,
+                         cache_pages=cache_pages)
+        self.stats.n_slabs = n_slabs
+        self.stats.n_cross = n_cross
+        self.n_slabs = n_slabs
+        self.n_cross = n_cross
+        # slab region: exclusive, LIFO free list, one per sequence
+        self._slab_free: list[int] = list(range(n_slabs - 1, -1, -1))
+        self._seq_slab: dict[int, int] = {}
+        # cross region: refcounted + indexed by frames key, LRU shares the
+        # page region's _tick clock
+        self._cross_free: list[int] = list(range(n_cross - 1, -1, -1))
+        self._seq_cross: dict[int, int] = {}
+        self._cross_ref: list[int] = [0] * n_cross
+        self._cross_index: dict[bytes, int] = {}
+        self._cross_key: dict[int, bytes] = {}
+        self._cross_touched: dict[int, int] = {}
+        # sequences whose cross entry was a MISS: the engine must run the
+        # encoder and fill the entry before the first decoder step
+        self._cross_fresh: set[int] = set()
+        # offloaded sequences that must reacquire a slab at onload
+        self._host_needs: dict[int, bool] = {}
+
+    # -- region queries ------------------------------------------------------
+
+    def seq_slab(self, seq_id: int) -> int | None:
+        """The sequence's slab index (None when it holds no slab)."""
+        return self._seq_slab.get(seq_id)
+
+    def seq_cross(self, seq_id: int) -> int | None:
+        """The sequence's cross-entry index (None when it holds none).
+        Survives offload — the entry is read-only and possibly shared, so
+        parking the sequence on host keeps its reference alive and skips
+        the encoder rerun at resume."""
+        return self._seq_cross.get(seq_id)
+
+    def consume_cross_fresh(self, seq_id: int) -> bool:
+        """True exactly once after an admission whose cross entry was a
+        miss: the caller must encode the frames and fill the entry."""
+        if seq_id in self._cross_fresh:
+            self._cross_fresh.discard(seq_id)
+            return True
+        return False
+
+    def free_slabs(self) -> int:
+        return len(self._slab_free)
+
+    def free_cross(self) -> int:
+        return len(self._cross_free)
+
+    # -- cross-region internals ----------------------------------------------
+
+    def _cross_evict(self, slot: int):
+        """Drop a cached-free cross entry's index (its slot is about to be
+        rewritten by a fresh encoder output)."""
+        key = self._cross_key.pop(slot, None)
+        if key is not None:
+            del self._cross_index[key]
+            self._cross_touched.pop(slot, None)
+            self.stats.cross_evictions += 1
+
+    def _pop_fresh_cross(self) -> int:
+        """Pop a free cross slot, preferring un-indexed slots so hot
+        cached encoder outputs are the last thing recycled; else recycle
+        the least-recently-touched cached-free one."""
+        for i in range(len(self._cross_free) - 1, -1, -1):
+            if self._cross_free[i] not in self._cross_key:
+                return self._cross_free.pop(i)
+        i = min(range(len(self._cross_free)),
+                key=lambda j: self._cross_touched.get(self._cross_free[j],
+                                                      0))
+        return self._cross_free.pop(i)
+
+    # -- unified admission ---------------------------------------------------
+
+    def allocate(self, seq_id: int, n_tokens: int, *, shared_prefix=(),
+                 need_slab: bool = False,
+                 cross_key: bytes | None = None) -> list[int] | None:
+        """PagePool.allocate extended to the slab and cross regions,
+        all-or-nothing. ``need_slab``: reserve one SSM-state slab;
+        ``cross_key``: the frames hash — a hit maps the existing entry
+        (refcount bump), a miss claims a fresh slot and marks the
+        sequence ``consume_cross_fresh`` so the engine runs the encoder.
+        Returns the page list (possibly ``[]`` on a pageless pool) or
+        None when *any* region lacks capacity — no region is touched."""
+        if seq_id in self._seq_pages:
+            raise KeyError(f"seq {seq_id} already allocated")
+        want_slab = need_slab and seq_id not in self._seq_slab
+        want_cross = cross_key is not None and seq_id not in self._seq_cross
+        cross_hit = (want_cross
+                     and self._cross_index.get(cross_key) is not None)
+        # a hit revives an existing slot (even cached-free: the slot just
+        # leaves the free list); only a miss consumes a free slot
+        if (want_slab and not self._slab_free) or \
+                (want_cross and not cross_hit and not self._cross_free):
+            self.stats.alloc_calls += 1
+            if seq_id not in self._denied:
+                self._denied.add(seq_id)
+                self.stats.admission_denials += 1
+            return None
+        pages = super().allocate(seq_id, n_tokens,
+                                 shared_prefix=shared_prefix)
+        if pages is None:
+            return None                 # super counted the denial
+        if want_slab:
+            slab = self._slab_free.pop()
+            self._seq_slab[seq_id] = slab
+            self.stats.slabs_in_use += 1
+            self.stats.peak_slabs_in_use = max(
+                self.stats.peak_slabs_in_use, self.stats.slabs_in_use)
+        if want_cross:
+            self.stats.cross_lookups += 1
+            self._tick += 1
+            if cross_hit:
+                slot = self._cross_index[cross_key]
+                self.stats.cross_hits += 1
+                if self._cross_ref[slot] == 0:
+                    self._cross_free.remove(slot)   # revive cached-free
+                    self.stats.cross_in_use += 1
+            else:
+                slot = self._pop_fresh_cross()
+                self._cross_evict(slot)
+                self._cross_index[cross_key] = slot
+                self._cross_key[slot] = cross_key
+                self._cross_fresh.add(seq_id)
+                self.stats.cross_in_use += 1
+            self._cross_ref[slot] += 1
+            self._cross_touched[slot] = self._tick
+            self._seq_cross[seq_id] = slot
+            self.stats.peak_cross_in_use = max(
+                self.stats.peak_cross_in_use, self.stats.cross_in_use)
+        return pages
+
+    def release(self, seq_id: int) -> int:
+        freed = super().release(seq_id)     # raises if not live
+        slab = self._seq_slab.pop(seq_id, None)
+        if slab is not None:
+            self._slab_free.append(slab)
+            self.stats.slabs_in_use -= 1
+        slot = self._seq_cross.pop(seq_id, None)
+        if slot is not None:
+            self._cross_ref[slot] -= 1
+            if self._cross_ref[slot] == 0:
+                self._cross_free.append(slot)   # cached-free: index kept
+                self.stats.cross_in_use -= 1
+        self._cross_fresh.discard(seq_id)
+        return freed
+
+    # -- host tier ------------------------------------------------------------
+
+    def offload(self, seq_id: int, n_host_pages: int,
+                payload=None) -> int | None:
+        """Like PagePool.offload, plus: the sequence's slab returns to the
+        free list (the engine snapshots the slab bytes into the payload)
+        and is reacquired at onload. The cross reference is *kept* — the
+        entry is read-only and possibly shared, so resume skips the
+        encoder rerun; host occupancy accounting stays pages-only."""
+        freed = super().offload(seq_id, n_host_pages, payload)
+        if freed is None:
+            return None
+        slab = self._seq_slab.pop(seq_id, None)
+        if slab is not None:
+            self._slab_free.append(slab)
+            self.stats.slabs_in_use -= 1
+        self._host_needs[seq_id] = slab is not None
+        return freed
+
+    def onload(self, seq_id: int, n_tokens: int):
+        """PagePool.onload, rerouted through the unified ``allocate`` so
+        the sequence reacquires a slab when it held one at offload (the
+        new slab index may differ — the engine scatters the snapshotted
+        bytes wherever ``seq_slab`` now points)."""
+        if seq_id not in self._host_seqs:
+            raise KeyError(f"seq {seq_id}: not offloaded, cannot onload")
+        n_host, payload = self._host_seqs[seq_id]
+        pages = self.allocate(seq_id, n_tokens,
+                              need_slab=self._host_needs.get(seq_id,
+                                                             False))
+        if pages is None:
+            return None
+        del self._host_seqs[seq_id]
+        self._host_needs.pop(seq_id, None)
+        self.stats.onload_calls += 1
+        self.stats.host_pages_in_use -= n_host
+        return pages, payload
+
+    # -- consistency ---------------------------------------------------------
+
+    def validate(self):
+        super().validate()
+        # slab region: conservation, exclusivity, stats agreement
+        assert len(self._slab_free) == len(set(self._slab_free)), \
+            "slab free-list dup"
+        assert len(self._slab_free) + len(self._seq_slab) == self.n_slabs,\
+            "slab conservation violated"
+        owned = list(self._seq_slab.values())
+        assert len(owned) == len(set(owned)), "slab owned twice"
+        assert not (set(owned) & set(self._slab_free)), \
+            "owned slab on the free list"
+        assert self.stats.slabs_in_use == len(self._seq_slab)
+        assert set(self._seq_slab) <= set(self._seq_pages), \
+            "slab held by a non-live sequence"
+        # cross region: refcount == owners (offloaded sequences keep
+        # their reference), free list == ref-zero slots, index/inverse
+        held: dict[int, int] = {}
+        for slot in self._seq_cross.values():
+            held[slot] = held.get(slot, 0) + 1
+        for slot in range(self.n_cross):
+            assert self._cross_ref[slot] == held.get(slot, 0), \
+                f"cross {slot}: ref {self._cross_ref[slot]} != owners"
+        assert len(self._cross_free) == len(set(self._cross_free)), \
+            "cross free-list dup"
+        assert all(self._cross_ref[s] == 0 for s in self._cross_free), \
+            "live cross entry on the free list"
+        assert len(self._cross_free) \
+            + sum(r > 0 for r in self._cross_ref) == self.n_cross, \
+            "cross conservation violated"
+        assert self.stats.cross_in_use == \
+            sum(r > 0 for r in self._cross_ref)
+        for key, slot in self._cross_index.items():
+            assert self._cross_key.get(slot) == key, \
+                "cross index/inverse mismatch"
+        for slot, key in self._cross_key.items():
+            assert self._cross_index.get(key) == slot, \
+                "cross inverse/index mismatch"
+        assert set(self._cross_fresh) <= set(self._seq_cross), \
+            "cross-fresh mark without an entry"

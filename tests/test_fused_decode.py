@@ -139,17 +139,18 @@ def test_fused_step_single_trace_across_ragged_ticks():
     params = lm_mod.lm_init(jax.random.PRNGKey(3), cfg)
     caches = lm_mod.paged_init_caches(cfg, n_pages=8, page_size=8,
                                       dtype=jnp.float32)
-    step = jax.jit(lm_mod.lm_paged_fused_step, static_argnums=(6, 7))
+    step = jax.jit(lm_mod.lm_paged_fused_step, static_argnums=(7, 8))
     bt = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
     w = 4
     tokens = jnp.zeros((2, w), jnp.int32)
+    sidx = jnp.zeros((2, 2), jnp.int32)               # attn-only sentinels
     ops.reset_op_calls()
     ticks = [([3, 9], [1, 4]), ([4, 13], [4, 1]),     # ragged + page
              ([8, 14], [2, 3]), ([0, 17], [0, 2])]    # boundary crossings
     for ctx, nv in ticks:
         logits, caches = step(params, tokens, jnp.asarray(ctx, jnp.int32),
-                              bt, jnp.asarray(nv, jnp.int32), caches, cfg,
-                              RT)
+                              bt, jnp.asarray(nv, jnp.int32), sidx, caches,
+                              cfg, RT)
     assert logits.shape == (2, w, cfg.vocab_size)
     assert step._cache_size() == 1                    # zero retrace
     calls = ops.op_calls()

@@ -193,9 +193,10 @@ def test_paged_vs_dense_decode_logits_agree():
     n_pages = max_seq // ps
     pcaches = lm_mod.paged_init_caches(cfg, n_pages, ps, dtype=jnp.float32)
     bt = jnp.arange(n_pages, dtype=jnp.int32)[None, :]
+    sidx = jnp.zeros((1, 2), jnp.int32)      # attn-only: sentinel row
     p_logits, pcaches = lm_mod.lm_paged_step(
         params, toks, jnp.zeros(1, jnp.int32), bt,
-        jnp.asarray([plen], jnp.int32), pcaches, cfg, RT)
+        jnp.asarray([plen], jnp.int32), sidx, pcaches, cfg, RT)
     np.testing.assert_allclose(np.asarray(d_logits), np.asarray(p_logits),
                                atol=1e-4)
 
@@ -208,7 +209,7 @@ def test_paged_vs_dense_decode_logits_agree():
         p_logits, pcaches = lm_mod.lm_paged_step(
             params, jnp.asarray([[tok]], jnp.int32),
             jnp.asarray([pos], jnp.int32), bt,
-            jnp.ones(1, jnp.int32), pcaches, cfg, RT)
+            jnp.ones(1, jnp.int32), sidx, pcaches, cfg, RT)
         np.testing.assert_allclose(np.asarray(d_logits),
                                    np.asarray(p_logits), atol=1e-4)
         tok = int(jnp.argmax(d_logits[0]))

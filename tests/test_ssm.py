@@ -109,3 +109,103 @@ def test_slstm_apply_decode_consistency():
     y_cat = jnp.concatenate(ys, axis=1)
     np.testing.assert_allclose(np.asarray(y_cat), np.asarray(y_full),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-boundary parity (SSM_CHUNK=128) and the slab-backed paged steps
+# ---------------------------------------------------------------------------
+
+def test_mamba_decode_chain_matches_full_scan_across_chunk_boundary():
+    """Token-by-token mamba_decode_step chained over lengths that
+    straddle SSM_CHUNK=128 must match mamba_apply's chunked full scan —
+    the carried (h, conv) state is exact across the chunk seam."""
+    rng = np.random.default_rng(10)
+    B, D = 2, 8
+    p = ssm.mamba_init(jax.random.PRNGKey(4), D, d_state=4, d_conv=4,
+                       expand=2, dt_rank=4)
+    for S in (ssm.SSM_CHUNK - 1, ssm.SSM_CHUNK, ssm.SSM_CHUNK + 5):
+        x = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+        y_full = ssm.mamba_apply(p, x, rt=RT)
+        st = ssm.mamba_init_state(p, B)
+        ys = []
+        for t in range(S):
+            y_t, st = ssm.mamba_decode_step(p, x[:, t:t + 1], st, rt=RT)
+            ys.append(y_t)
+        y_cat = jnp.concatenate(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_cat), np.asarray(y_full),
+                                   rtol=2e-4, atol=2e-4, err_msg=f"S={S}")
+
+
+def test_mamba_paged_step_slab_path_matches_full_scan():
+    """The slab-backed ragged chunk step chained over uneven chunks that
+    straddle SSM_CHUNK=128 matches the full scan, and a masked row
+    (n_valid=0) leaves its state bit-identical."""
+    rng = np.random.default_rng(11)
+    B, D, S = 2, 8, ssm.SSM_CHUNK + 12
+    p = ssm.mamba_init(jax.random.PRNGKey(5), D, d_state=4, d_conv=4,
+                       expand=2, dt_rank=4)
+    x = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+    y_full = ssm.mamba_apply(p, x, rt=RT)
+    st = ssm.mamba_init_state(p, B)
+    ys, off = [], 0
+    for c in (96, 30, 14):
+        nv = jnp.full((B,), c, jnp.int32)
+        y_c, st = ssm.mamba_paged_step(p, x[:, off:off + c], st, nv, rt=RT)
+        ys.append(y_c)
+        off += c
+    y_cat = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_cat), np.asarray(y_full),
+                               rtol=2e-4, atol=2e-4)
+    # ragged: row 1 inactive -> its state must be untouched, bit for bit
+    st0 = ssm.mamba_init_state(p, B)
+    nv = jnp.asarray([5, 0], jnp.int32)
+    _, st1 = ssm.mamba_paged_step(p, x[:, :8], st0, nv, rt=RT)
+    for k in st0:
+        assert bool(jnp.all(st1[k][1] == st0[k][1])), k
+
+
+def test_mlstm_paged_step_matches_full_scan_across_chunk_boundary():
+    rng = np.random.default_rng(12)
+    B, D, S = 2, 16, ssm.SSM_CHUNK + 24
+    p = ssm.mlstm_init(jax.random.PRNGKey(6), D, n_heads=2)
+    x = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+    y_full = ssm.mlstm_apply(p, x, rt=RT, n_heads=2)
+    assert not bool(jnp.any(jnp.isnan(y_full)))   # c >= 128 single chunk
+    st = ssm.mlstm_init_state(p, B, n_heads=2)
+    dc = p["conv_w"].shape[0]
+    st = dict(st, conv=jnp.zeros((B, dc - 1, p["conv_w"].shape[1]),
+                                 jnp.float32))
+    ys, off = [], 0
+    for c in (64, 60, 28):
+        nv = jnp.full((B,), c, jnp.int32)
+        y_c, st = ssm.mlstm_paged_step(p, x[:, off:off + c], st, nv,
+                                       rt=RT, n_heads=2)
+        ys.append(y_c)
+        off += c
+    y_cat = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_cat), np.asarray(y_full),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_slstm_paged_step_matches_full_scan_ragged():
+    rng = np.random.default_rng(13)
+    B, D, S = 2, 16, 24
+    p = ssm.slstm_init(jax.random.PRNGKey(7), D, n_heads=2)
+    x = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+    y_full = ssm.slstm_apply(p, x, rt=RT)
+    st = ssm.slstm_init_state(p, B)
+    ys, off = [], 0
+    for c in (10, 9, 5):
+        nv = jnp.full((B,), c, jnp.int32)
+        y_c, st = ssm.slstm_paged_step(p, x[:, off:off + c], st, nv, rt=RT)
+        ys.append(y_c)
+        off += c
+    y_cat = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_cat), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)
+    # inactive row: state bit-preserved
+    st0 = ssm.slstm_init_state(p, B)
+    nv = jnp.asarray([3, 0], jnp.int32)
+    _, st1 = ssm.slstm_paged_step(p, x[:, :6], st0, nv, rt=RT)
+    for k in st0:
+        assert bool(jnp.all(st1[k][1] == st0[k][1])), k

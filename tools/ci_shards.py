@@ -50,6 +50,7 @@ SHARDS: dict[str, list[str]] = {
         "tests/test_scheduler.py",
         "tests/test_serving.py",
         "tests/test_spec_decode.py",
+        "tests/test_state_cache.py",
     ],
     # multi-device dry-runs + training loops — few long tests
     "system-training": [
