@@ -32,10 +32,10 @@ def run(csv_rows: list):
         x = jnp.asarray(x_all[:b])
         for name, fn, pp in (("fp32", fp, params), ("sp2_4", qf, qp)):
             jax.block_until_ready(fn(pp, x))
-            t0 = time.time()
+            t0 = time.monotonic()
             for _ in range(30):
                 jax.block_until_ready(fn(pp, x))
-            t = (time.time() - t0) / 30 / b
+            t = (time.monotonic() - t0) / 30 / b
             print(f"  B={b:5d} {name:6s}: {t*1e6:8.2f} us/sample")
             csv_rows.append((f"fig5/{name}_b{b}", t * 1e6, b))
 

@@ -379,12 +379,12 @@ def fused_decode_bench(csv_rows, *, requests: int = 6, slots: int = 2,
             m, dt = None, float("inf")
             for _ in range(3):
                 eng.reset_metrics()
-                t0 = time.time()
+                t0 = time.monotonic()
                 for i, p in enumerate(prompts):
                     eng.submit(Request(rid=i, prompt=p,
                                        max_new_tokens=new_tokens))
                 outs[fused] = {r.rid: r.output for r in eng.run()}
-                dt = min(dt, time.time() - t0)
+                dt = min(dt, time.monotonic() - t0)
                 mm = eng.metrics()
                 if m is None or mm["tokens_per_s"] > m["tokens_per_s"]:
                     m = mm

@@ -38,10 +38,10 @@ def kernel_microbench(csv_rows):
         qbytes = qt.nbytes_stored()
         f = jax.jit(lambda xx, q: ops.spx_matmul(xx, q, impl="ref"))
         jax.block_until_ready(f(x, qt))
-        t0 = time.time()
+        t0 = time.monotonic()
         for _ in range(10):
             jax.block_until_ready(f(x, qt))
-        t = (time.time() - t0) / 10
+        t = (time.monotonic() - t0) / 10
         print(f"  {scheme:6s}: weight bytes {qbytes/1e3:8.1f}KB "
               f"({dense_bytes/qbytes:.1f}x smaller than bf16), "
               f"{t*1e6:8.0f} us/call (host ref path)")

@@ -30,10 +30,10 @@ TPU_W = 170.0
 def _measure(fn, *args, iters=30):
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
         jax.block_until_ready(fn(*args))
-    t0 = time.time()
+    t0 = time.monotonic()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters
+    return (time.monotonic() - t0) / iters
 
 
 def modeled_tpu_time(batch: int, weight_bits: int) -> float:

@@ -77,10 +77,10 @@ def main(argv=None):
     # per-sample timing (Table 1 analog on this host)
     bench = jax.jit(lambda p, x: paper_mlp_predict(p, x))
     bench(params, x_test).block_until_ready()
-    t0 = time.time()
+    t0 = time.monotonic()
     for _ in range(20):
         bench(params, x_test).block_until_ready()
-    t_fp = (time.time() - t0) / (20 * len(data.x_test))
+    t_fp = (time.monotonic() - t0) / (20 * len(data.x_test))
     print(f"\nper-sample inference (this host, fp32): {t_fp * 1e6:.2f} us")
     print("(cross-device comparison incl. modeled TPU time: "
           "benchmarks/table1.py)")

@@ -103,14 +103,14 @@ def main(argv=None):
         eng = ServeEngine(params, cfg, batch_slots=4, max_seq=64,
                           quantize=scheme, rt=ert, kv_layout=layout,
                           prefix_cache=share, spec_decode=spec)
-        t0 = time.time()
+        t0 = time.monotonic()
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p,
                                max_new_tokens=args.new_tokens,
                                frames=(None if frame_sets is None
                                        else frame_sets[i % 2])))
         done = eng.run()
-        dt = time.time() - t0
+        dt = time.monotonic() - t0
         n_tok = sum(len(r.output) for r in done)
         results[tag] = {r.rid: r.output for r in done}
         m = eng.metrics()

@@ -119,17 +119,17 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         return {"arch": arch, "shape": shape_name, "status": skip}
 
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    t0 = time.monotonic()
     with ambient_mesh(mesh):
         bundle = build_step(cfg, shape, mesh, **(extra_kw or {}))
         jfn = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
                       out_shardings=bundle.out_shardings,
                       donate_argnums=bundle.donate_argnums)
         lowered = jfn.lower(*bundle.args)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.monotonic() - t0
+        t0 = time.monotonic()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.monotonic() - t0
 
     mem = compiled.memory_analysis()
     cost = cost_analysis_dict(compiled)

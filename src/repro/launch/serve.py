@@ -42,6 +42,7 @@ window), REPRO_SCHEDULER / REPRO_HOST_PAGES / REPRO_PREFIX_CACHE_PAGES
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import time
 
@@ -55,6 +56,44 @@ from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime
 from repro.serving.engine import Request, ServeEngine
+
+
+def _run_streaming(eng, reqs, arrival_s: float):
+    """Asyncio front-end over the tick-driven engine: one driver task
+    steps the engine whenever it has work, a submitter feeds requests in
+    over time (arrival overlaps compute), and one consumer per request
+    drains ``async for tok in eng.stream(rid)`` as tokens are emitted —
+    all on one event loop, no threads. Returns the finished list plus a
+    per-rid monotonic stamp of the first *delivered* token, the
+    user-visible TTFT the batch path cannot measure."""
+    delivered: dict[int, float] = {}
+
+    async def consume(req):
+        async for _tok in eng.stream(req.rid):
+            delivered.setdefault(req.rid, time.monotonic())
+
+    async def submit_all(consumers):
+        for req in reqs:
+            eng.submit(req)
+            consumers.append(asyncio.ensure_future(consume(req)))
+            await asyncio.sleep(arrival_s)
+
+    async def amain():
+        consumers: list = []
+        sub = asyncio.ensure_future(submit_all(consumers))
+        # tick while anything is arriving or in flight, yielding after
+        # every tick so consumers drain the tokens it just emitted
+        while not sub.done() or eng.has_work():
+            if eng.has_work():
+                eng.step()
+                await asyncio.sleep(0)
+            else:
+                await asyncio.sleep(arrival_s / 4)
+        await sub
+        await asyncio.gather(*consumers)
+
+    asyncio.run(amain())
+    return list(eng.finished), delivered
 
 
 def main(argv=None):
@@ -121,6 +160,16 @@ def main(argv=None):
                     help="level set for --kv-quant (8-bit-code schemes)")
     ap.add_argument("--kv-dtype", default="f32", choices=("f32", "bf16"),
                     help="unquantized KV cache element dtype")
+    ap.add_argument("--stream", action="store_true",
+                    help="asyncio front-end: request arrival overlaps "
+                         "engine ticks and each request's tokens are "
+                         "consumed as they are emitted (async for over "
+                         "engine.stream(rid)) — TTFT becomes time to "
+                         "first *delivered* token. docs/SERVING.md, "
+                         "'Streaming delivery and cancellation'.")
+    ap.add_argument("--arrival-ms", type=float, default=0.0, metavar="MS",
+                    help="gap between request arrivals under --stream "
+                         "(0 = back-to-back, still interleaved with ticks)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -169,24 +218,37 @@ def main(argv=None):
             f"prompt tail (max-seq {args.max_seq}, new-tokens "
             f"{args.new_tokens})")
     hi = max(2, min(args.max_seq // 4, tail_cap))
-    t0 = time.time()
+    reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(min(4, hi - 1), hi))
         prompt = np.concatenate(
             [sys_prompt,
              rng.integers(0, cfg.vocab_size, plen).astype(np.int32)])
-        eng.submit(Request(rid=i, prompt=prompt,
-                           max_new_tokens=args.new_tokens,
-                           frames=(None if frame_sets is None
-                                   else frame_sets[i % 2])))
-    done = eng.run()
-    dt = time.time() - t0
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=args.new_tokens,
+                            frames=(None if frame_sets is None
+                                    else frame_sets[i % 2])))
+    t0 = time.monotonic()
+    if args.stream:
+        done, delivered = _run_streaming(eng, reqs,
+                                         args.arrival_ms / 1e3)
+    else:
+        for req in reqs:
+            eng.submit(req)
+        done = eng.run()
+    dt = time.monotonic() - t0
     n_tok = sum(len(r.output) for r in done)
     m = eng.metrics()
     print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s), median TTFT {m['ttft_p50_ms']:.0f}ms "
           f"scheme={scheme} layout={m['kv_layout']} "
           f"kv={m['kv_scheme']}/{m['kv_cache_dtype']}")
+    if args.stream:
+        sttft = sorted(delivered[r.rid] - r.t_enqueue for r in done)
+        print(f"[serve] streaming: delivered TTFT p50 "
+              f"{1e3 * sttft[len(sttft) // 2]:.0f}ms over "
+              f"{len(done)} consumers (whole-request latency p50 "
+              f"{m['latency_p50_ms']:.0f}ms)")
     if m["kv_layout"] == "paged":
         print(f"[serve] pages: {m['n_pages']} x {m['page_size']} tok, "
               f"occupancy mean {m['occupancy_mean']:.2f} / "

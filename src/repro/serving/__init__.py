@@ -3,7 +3,9 @@ from .kv_cache import (PagePool, StateCache, cross_kv_bytes_per_seq,
                        kv_bytes_per_token, pool_bytes,
                        ssm_state_bytes_per_seq)
 from .spec import PromptLookupDrafter
+from .stream import StreamCancelled, StreamError, TokenStream
 
 __all__ = ["Request", "ServeEngine", "PagePool", "StateCache",
            "kv_bytes_per_token", "pool_bytes", "ssm_state_bytes_per_seq",
-           "cross_kv_bytes_per_seq", "PromptLookupDrafter"]
+           "cross_kv_bytes_per_seq", "PromptLookupDrafter",
+           "TokenStream", "StreamCancelled", "StreamError"]

@@ -86,8 +86,17 @@ from repro.serving.kv_cache import (StateCache, cross_kv_bytes_per_seq,
                                     kv_bytes_per_token,
                                     ssm_state_bytes_per_seq)
 from repro.serving.spec import DEFAULT_SPEC_K, PromptLookupDrafter
+from repro.serving.stream import StreamState, TokenStream
 
 __all__ = ["Request", "ServeEngine"]
+
+#: every engine timestamp (t_enqueue / t_first_token / t_done, wall
+#: accounting) comes through this hook. It must be a *monotonic* clock:
+#: TTFT and latency are differences of these stamps, and wall-clock
+#: ``time.time()`` can step backwards under NTP adjustment, turning a
+#: latency percentile negative. Module-level so the fake-clock
+#: regression test can monkeypatch it.
+_now = time.monotonic
 
 #: chunk length for chunked prefill when the caller doesn't pass one;
 #: REPRO_PREFILL_CHUNK=N overrides. Ragged final chunks are padded up to
@@ -330,6 +339,10 @@ class ServeEngine:
         self.slot_pos = np.zeros(batch_slots, np.int64)   # tokens in cache
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        # per-rid delivery state (serving/stream.py): created at submit,
+        # terminal at finish/cancel/error; stream() hands out views
+        self._streams: dict[int, StreamState] = {}
+        self._cancelled = 0
         self._occ_samples: list[float] = []
         self._tokens_out = 0
         self._steps = 0
@@ -569,6 +582,17 @@ class ServeEngine:
                 f"request {req.rid}: prompt ({len(req.prompt)}) + "
                 f"max_new_tokens ({req.max_new_tokens}) exceeds "
                 f"max_seq={self.max_seq}")
+        if req.done or req.output:
+            # a served Request object is not reusable: its PRNG key chain
+            # has advanced past every draw it made, and t_first_token /
+            # t_done / preemptions hold the previous run's values —
+            # resubmitting it would silently produce a different sampled
+            # output and corrupt every latency percentile
+            raise ValueError(
+                f"request {req.rid}: this Request object was already "
+                f"served ({len(req.output)} output token(s), "
+                f"done={req.done}) — build a fresh Request per "
+                "submission")
         in_flight = ({r.rid for r in self.queue}
                      | {r.rid for r in self.slot_req if r is not None})
         if req.rid in in_flight:
@@ -576,6 +600,15 @@ class ServeEngine:
             # dict; a duplicate would KeyError mid-run (paged) or
             # silently overwrite another request's output (dense)
             raise ValueError(f"request id {req.rid} already in flight")
+        if any(r.rid == req.rid for r in self.finished):
+            # same key-collision hazard one step later: finished results
+            # and stream states are looked up by rid. reset_metrics()
+            # clears `finished`, so the benchmark warmup-then-measure
+            # pattern stays legal with fresh Request objects.
+            raise ValueError(
+                f"request id {req.rid} already finished this measurement "
+                "window — reuse a rid only after reset_metrics(), and "
+                "always with a fresh Request object")
         if self.kv_layout == "paged" and self._has_pages:
             # worst-case reservation (planner-owned model): assume no
             # shared prefix — the index is volatile, so a match visible
@@ -594,9 +627,10 @@ class ServeEngine:
             req.key = (jax.random.PRNGKey(req.seed)
                        if req.seed is not None
                        else jax.random.fold_in(self._base_key, req.rid))
-        req.t_enqueue = time.time()
+        req.t_enqueue = _now()
         req._seq = self._submit_seq
         self._submit_seq += 1
+        self._streams[req.rid] = StreamState(req)
         self.queue.append(req)
 
     def step(self):
@@ -605,9 +639,15 @@ class ServeEngine:
         tick. Callers that interleave ``submit`` with engine progress —
         arrival processes in benchmarks, the differential storm tests —
         drive this directly; ``run`` is this in a drain loop."""
-        t0 = time.time()
+        t0 = _now()
         self._tick()
-        self._wall += time.time() - t0
+        self._wall += _now() - t0
+
+    def has_work(self) -> bool:
+        """Anything queued or resident? The asyncio front-end's
+        tick-or-idle signal (and run()'s drain condition)."""
+        return bool(self.queue) or any(r is not None
+                                       for r in self.slot_req)
 
     def _tick(self):
         self._steps += 1
@@ -622,6 +662,10 @@ class ServeEngine:
             self._occ_samples.append(
                 sum(r is not None for r in self.slot_req)
                 / self.batch_slots)
+        # wake async stream consumers once per tick — every emission of
+        # this tick is already in Request.output by now
+        for st in self._streams.values():
+            st.notify()
 
     def run(self, max_steps: int = 10_000, *, strict: bool = True):
         """Drive until queue + slots drain (or step limit).
@@ -632,24 +676,107 @@ class ServeEngine:
         increments, and under ``strict=True`` (the default) a
         RuntimeError is raised — pass ``strict=False`` to accept the
         partial ``finished`` list instead."""
-        t0 = time.time()
+        t0 = _now()
         for _ in range(max_steps):
-            if not self.queue and all(r is None for r in self.slot_req):
+            if not self.has_work():
                 break
             self._tick()
-        self._wall += time.time() - t0
-        self.drained = (not self.queue
-                        and all(r is None for r in self.slot_req))
+        self._wall += _now() - t0
+        self.drained = not self.has_work()
         if not self.drained:
             self._undrained_runs += 1
             if strict:
-                raise RuntimeError(
+                exc = RuntimeError(
                     f"run(max_steps={max_steps}) stopped with live work: "
                     f"{len(self.queue)} queued, "
                     f"{sum(r is not None for r in self.slot_req)} resident "
                     f"({len(self.finished)} finished). Raise max_steps, or "
                     f"pass strict=False to accept partial progress.")
+                # streams of the still-live requests get a terminal error
+                # state (not a silent hang): pending consumers raise
+                # StreamError instead of waiting for tokens that will
+                # never come
+                self._fail_streams(exc)
+                raise exc
         return self.finished
+
+    # -- incremental delivery + cancellation (serving/stream.py) -------------
+
+    def stream(self, rid: int) -> TokenStream:
+        """A token iterator over one submitted request. Sync iteration
+        drives ``step()`` itself when it runs dry; ``async for`` parks on
+        a per-tick wakeup instead (an external loop must tick the
+        engine). Every stream sees the full output exactly once — tokens
+        are read from ``Request.output`` behind a cursor, so delivery is
+        bit-identical to the ``run()`` result by construction. Raises
+        KeyError for a rid this engine never saw (or whose terminal
+        stream state ``reset_metrics`` already pruned)."""
+        st = self._streams.get(rid)
+        if st is None:
+            raise KeyError(
+                f"request {rid}: no stream state (never submitted, or "
+                "pruned by reset_metrics())")
+        return TokenStream(self, st)
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request mid-flight at any tick boundary and free
+        everything it holds — pages/slabs (ref-aware), drafter state,
+        prompt/frames keys, and for a preempted-and-parked request its
+        host-tier snapshot plus the cross reference offload retained.
+        Open streams turn terminal (``StreamCancelled``); the request
+        never joins ``finished``. Returns True when live work was
+        cancelled, False when the request already reached a terminal
+        state (finished, or cancelled before). Raises KeyError for a rid
+        this engine never saw."""
+        st = self._streams.get(rid)
+        for slot, r in enumerate(self.slot_req):
+            if r is not None and r.rid == rid:
+                # resident: queued-for-decode, mid-prefill, mid-verify —
+                # all hold the same reservation; release() recycles
+                # zero-ref pages, the slab, and the cross reference
+                self.slot_req[slot] = None
+                self.slot_pos[slot] = 0
+                if self.kv_layout == "paged":
+                    self.pool.release(rid)
+                    self.block_tables[slot] = 0
+                    self._fed[slot] = -1
+                    self._state_idx[slot] = (self._n_slabs, self._n_cross)
+                    if self.spec_k:
+                        self.drafter.drop(rid)
+                self._drop_request(r, st)
+                return True
+        for r in list(self.queue):
+            if r.rid == rid:
+                self.queue.remove(r)
+                if r._resume is not None:
+                    # preempted-and-parked: the pool holds its snapshot
+                    # on the host tier (and, enc-dec, its cross ref)
+                    self.pool.drop_host(rid)
+                    r._resume = None
+                self._drop_request(r, st)
+                return True
+        if st is not None or any(r.rid == rid for r in self.finished):
+            return False                # already finished / cancelled
+        raise KeyError(f"request {rid}: unknown rid (never submitted)")
+
+    def _drop_request(self, req: Request, st: StreamState | None):
+        """Shared tail of both cancel paths: per-rid key caches, the
+        terminal stamp, the stream transition, the metric."""
+        if self.kv_layout == "paged":
+            self._prompt_keys.pop(req.rid, None)
+            self._frames_keys.pop(req.rid, None)
+        req.done = True
+        req.t_done = _now()
+        self._cancelled += 1
+        if st is not None:
+            st.cancel()
+
+    def _fail_streams(self, exc: BaseException):
+        """Move every still-live stream to the error state (undrained
+        strict run): blocked consumers raise StreamError, never hang."""
+        for st in self._streams.values():
+            if st.status == "live":
+                st.fail(exc)
 
     def reset_metrics(self):
         """Zero the throughput/latency/occupancy counters (compiled steps
@@ -669,7 +796,12 @@ class ServeEngine:
         self._offload_bytes = 0
         self._onload_bytes = 0
         self._undrained_runs = 0
+        self._cancelled = 0
         self.drained = True
+        # terminal stream states go with the finished list they mirror;
+        # live ones (in-flight requests) survive the reset
+        self._streams = {rid: st for rid, st in self._streams.items()
+                         if st.status == "live"}
         if self.kv_layout == "paged":
             st = self.pool.stats
             st.peak_pages_in_use = st.pages_in_use
@@ -785,6 +917,7 @@ class ServeEngine:
             "kv_cache_dtype": ("uint8+f32scale" if self.kv_scheme
                                else self.kv_cache_dtype.name),
             "requests_finished": len(self.finished),
+            "requests_cancelled": self._cancelled,
             "tokens_generated": self._tokens_out,
             "engine_steps": self._steps,
             "model_calls": self._model_calls,
@@ -1191,7 +1324,7 @@ class ServeEngine:
                 self._tokens_out += 1
                 if self.spec_k:
                     self.drafter.extend(req.rid, int(first))
-                req.t_first_token = time.time()
+                req.t_first_token = _now()
                 self._maybe_finish(i)       # max_new_tokens == 1
 
     def _decode_step_paged(self):
@@ -1404,8 +1537,11 @@ class ServeEngine:
     def _finish(self, slot: int):
         req = self.slot_req[slot]
         req.done = True
-        req.t_done = time.time()
+        req.t_done = _now()
         self.finished.append(req)
+        st = self._streams.get(req.rid)
+        if st is not None:
+            st.finish()
         self.slot_req[slot] = None
         if self.kv_layout == "paged":
             # release recycles zero-ref pages, returns the slab to the
@@ -1452,7 +1588,7 @@ class ServeEngine:
                 first = self._pick_token(logits[0], req)
                 req.output.append(int(first))
                 self._tokens_out += 1
-                req.t_first_token = time.time()
+                req.t_first_token = _now()
                 self._maybe_finish(slot)    # max_new_tokens == 1
 
     def _decode_step_dense(self):

@@ -578,6 +578,20 @@ class PagePool:
         self.stats.host_pages_in_use -= n_host
         return pages, payload
 
+    def drop_host(self, seq_id: int) -> int:
+        """Forget a host-parked sequence without bringing it back — the
+        mid-flight cancellation path for preempted-and-parked requests.
+        The snapshot payload is dropped and its host occupancy returned
+        to the tier. Returns the host pages released. Raises a
+        descriptive ``KeyError`` when the sequence is not parked (same
+        contract as ``onload``)."""
+        if seq_id not in self._host_seqs:
+            raise KeyError(f"seq {seq_id}: not offloaded, cannot drop")
+        n_host, _ = self._host_seqs.pop(seq_id)
+        self.stats.host_pages_in_use -= n_host
+        self._denied.discard(seq_id)
+        return n_host
+
     def block_table_row(self, seq_id: int, width: int) -> np.ndarray:
         """(width,) int32 physical-page row for the device block table.
         Slots past the sequence's allocation point at page 0 — the kernel
@@ -883,6 +897,24 @@ class StateCache(PagePool):
         self.stats.onload_calls += 1
         self.stats.host_pages_in_use -= n_host
         return pages, payload
+
+    def drop_host(self, seq_id: int) -> int:
+        """PagePool.drop_host plus the reference ``offload`` deliberately
+        retained: a parked sequence keeps its cross entry alive so resume
+        skips the encoder rerun, but a *cancelled* one never resumes, so
+        the share is released here (the entry goes cached-free at zero
+        refs, index kept — revivable by a later request with the same
+        frames)."""
+        n_host = super().drop_host(seq_id)
+        self._host_needs.pop(seq_id, None)
+        slot = self._seq_cross.pop(seq_id, None)
+        if slot is not None:
+            self._cross_ref[slot] -= 1
+            if self._cross_ref[slot] == 0:
+                self._cross_free.append(slot)   # cached-free: index kept
+                self.stats.cross_in_use -= 1
+        self._cross_fresh.discard(seq_id)       # never-encoded entry
+        return n_host
 
     # -- consistency ---------------------------------------------------------
 

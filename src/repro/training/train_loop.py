@@ -169,7 +169,7 @@ class TrainLoop:
         while step_i < self.cfg.max_steps:
             batch = next(self.data)
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            t0 = time.time()
+            t0 = time.monotonic()
             if (self.cfg.kill_at_step is not None
                     and step_i == self.cfg.kill_at_step):
                 raise KeyboardInterrupt(
@@ -177,7 +177,7 @@ class TrainLoop:
             params, opt_state, ef, metrics = self._step(params, opt_state,
                                                         ef, batch)
             jax.block_until_ready(metrics["loss"])
-            dt = time.time() - t0
+            dt = time.monotonic() - t0
             step_i += 1
             try:
                 self.watchdog.observe(dt)

@@ -51,6 +51,7 @@ SHARDS: dict[str, list[str]] = {
         "tests/test_serving.py",
         "tests/test_spec_decode.py",
         "tests/test_state_cache.py",
+        "tests/test_streaming.py",
     ],
     # multi-device dry-runs + training loops — few long tests
     "system-training": [
