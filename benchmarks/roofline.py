@@ -1,13 +1,15 @@
 import os
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 # The roofline cells compile against the 512-chip production mesh on a host
 # backend; the fused-decode bench times the real single-host serving engine,
 # where 512 fake devices would poison every measurement — so the flag is
 # only set for the roofline modes.
 if "--fused-decode-bench" not in sys.argv:
-    os.environ.setdefault(
-        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    from repro.launch.hostdev import set_host_device_count
+    set_host_device_count(512)
 
 """Roofline analysis (deliverable g): per (arch x shape), derive the three
 terms from compiled artifacts on the single-pod production mesh:
@@ -40,11 +42,10 @@ import re
 
 import jax
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 from repro.configs import assigned_archs, get_config  # noqa: E402
 from repro.configs.base import LM_SHAPES  # noqa: E402
 from repro.compat import cost_analysis_dict  # noqa: E402
+from repro.launch.dryrun import parse_collectives  # noqa: E402
 from repro.launch.mesh import ambient_mesh, make_production_mesh  # noqa: E402
 from repro.launch.steps import build_step  # noqa: E402
 
@@ -60,9 +61,6 @@ BENCH = os.path.normpath(os.path.join(os.path.dirname(__file__), "..",
 def _compile_cost_variant(cfg, shape, n_periods: int, mesh, *,
                           fsdp: bool, optimizer: str | None,
                           quantized: bool = True, kv_quant: bool = False):
-    # imported here, not at module top: dryrun force-sets the 512-device
-    # XLA_FLAGS at import, which must not leak into --fused-decode-bench
-    from repro.launch.dryrun import parse_collectives
     vcfg = dataclasses.replace(
         cfg, n_layers=len(cfg.pattern) * n_periods,
         n_enc_layers=n_periods if cfg.enc_dec else cfg.n_enc_layers)
@@ -330,7 +328,7 @@ def fused_decode_bench(csv_rows, *, requests: int = 6, slots: int = 2,
     from repro.kernels import ops
     from repro.models import lm as lm_mod
     from repro.runtime import Runtime, planner
-    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.engine import Request, ServeConfig, ServeEngine
 
     # serving_bench's pinned geometry: dh=128 keeps the SPx byte ratio
     # representative, vocab=32 keeps greedy argmaxes away from near-ties
@@ -362,10 +360,12 @@ def fused_decode_bench(csv_rows, *, requests: int = 6, slots: int = 2,
     for axis, ert in axes.items():
         outs, mets = {}, {}
         for fused in (True, False):
-            eng = ServeEngine(params, cfg, batch_slots=slots,
-                              max_seq=max_seq, quantize="sp2_4", rt=ert,
-                              kv_layout="paged", spec_decode=True,
-                              spec_k=spec_k, fused_decode=fused)
+            eng = ServeEngine(params, cfg,
+                              ServeConfig(batch_slots=slots, max_seq=max_seq,
+                                          quantize="sp2_4", kv_layout="paged",
+                                          spec_decode=True, spec_k=spec_k,
+                                          fused_decode=fused),
+                              rt=ert)
             ops.reset_op_calls()
             for i, p in enumerate(prompts):        # warmup: pay compiles
                 eng.submit(Request(rid=i, prompt=p,

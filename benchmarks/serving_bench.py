@@ -59,8 +59,11 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 
 import numpy as np
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
 
 ARTIFACT = os.path.normpath(os.path.join(os.path.dirname(__file__), "..",
                                          "BENCH_serving.json"))
@@ -77,7 +80,7 @@ def run(csv_rows, *, requests: int = 10, slots: int = 4, max_seq: int = 64,
     from repro.configs import get_config, reduced
     from repro.models import lm as lm_mod
     from repro.runtime import Runtime
-    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.engine import Request, ServeConfig, ServeEngine
 
     import dataclasses
     # Geometry notes. reduced() shrinks head_dim to 32, where the 4-byte
@@ -116,8 +119,10 @@ def run(csv_rows, *, requests: int = 10, slots: int = 4, max_seq: int = 64,
                          "spx_scheme": SPX_SCHEME}}
     print("\n== serving: dense-f32 vs paged-bf16 vs paged-SPx KV ==")
     for axis, kw in axes.items():
-        eng = ServeEngine(params, cfg, batch_slots=slots, max_seq=max_seq,
-                          quantize="sp2_4", **kw)
+        ert = kw.pop("rt")
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=slots, max_seq=max_seq,
+                                      quantize="sp2_4", **kw), rt=ert)
         # warmup pass: pay every jit compile (the paged engine compiles
         # O(log prefill_chunk) chunk-width variants vs dense's two steps —
         # timing a cold run would misattribute compile time to the layout)
@@ -191,6 +196,9 @@ def run(csv_rows, *, requests: int = 10, slots: int = 4, max_seq: int = 64,
     # unified-state-cache acceptance: every architecture family serves
     # paged (CI asserts the four per-arch keys exist in the artifact)
     result["arch_matrix"] = _arch_matrix_scenario(csv_rows, rt)
+    # tensor-parallel acceptance: 1-vs-2-shard tok/s + per-shard peak KV
+    # bytes, measured in a forced-8-host-device child process
+    result["sharded"] = _sharded_scenario(csv_rows)
 
     with open(out_path, "w") as fh:
         json.dump(result, fh, indent=2, sort_keys=True)
@@ -219,18 +227,18 @@ def _streaming_scenario(csv_rows, params, cfg, rt, *, requests: int = 8,
     bit-identical."""
     import time
 
-    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.engine import Request, ServeConfig, ServeEngine
 
     rng = np.random.default_rng(seed)
     prompts = [rng.integers(0, cfg.vocab_size,
                             int(rng.integers(4, max_seq // 2)))
                .astype(np.int32) for _ in range(requests)]
     kw = dict(batch_slots=slots, max_seq=max_seq, quantize="sp2_4",
-              rt=rt, kv_layout="paged")
+              kv_layout="paged")
 
     print("\n== serving: whole-request run() vs per-request streams ==")
     # whole-request baseline (warmup pays the compiles, as everywhere)
-    base = ServeEngine(params, cfg, **kw)
+    base = ServeEngine(params, cfg, ServeConfig(**kw), rt=rt)
     for measured in (False, True):
         for i, p in enumerate(prompts):
             base.submit(Request(rid=i, prompt=p,
@@ -243,7 +251,7 @@ def _streaming_scenario(csv_rows, params, cfg, rt, *, requests: int = 8,
 
     # streamed pass: identical engine, but a delivery loop polls every
     # stream after each tick and timestamps the first delivered token
-    eng = ServeEngine(params, cfg, **kw)
+    eng = ServeEngine(params, cfg, ServeConfig(**kw), rt=rt)
     for i, p in enumerate(prompts):                  # warmup
         eng.submit(Request(rid=i, prompt=p, max_new_tokens=new_tokens))
     eng.run()
@@ -322,7 +330,7 @@ def _prefix_cache_scenario(csv_rows, params, cfg, rt, *, requests: int = 8,
     are scheduling/accounting claims, not numerics): greedy outputs
     identical with sharing on vs off, prefill-tokens-skipped > 0, and
     peak KV pages strictly lower with sharing."""
-    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.engine import Request, ServeConfig, ServeEngine
 
     page_size = 8
     rng = np.random.default_rng(seed)
@@ -339,9 +347,11 @@ def _prefix_cache_scenario(csv_rows, params, cfg, rt, *, requests: int = 8,
     outputs, mets = {}, {}
     print("\n== serving: shared system prompt, prefix cache off vs on ==")
     for on in (False, True):
-        eng = ServeEngine(params, cfg, batch_slots=slots, max_seq=max_seq,
-                          quantize="sp2_4", rt=rt, kv_layout="paged",
-                          page_size=page_size, prefix_cache=on)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=slots, max_seq=max_seq,
+                                      quantize="sp2_4", kv_layout="paged",
+                                      page_size=page_size, prefix_cache=on),
+                          rt=rt)
         eng.submit(Request(rid=0, prompt=prompts[0],
                            max_new_tokens=new_tokens))
         eng.run()                                    # prime the pool
@@ -399,7 +409,7 @@ def _spec_decode_scenario(csv_rows, params, cfg, rt, *, requests: int = 6,
     chunk-path verify window (different reduction orders), and the call/
     acceptance claims ride the same argmaxes, so a near-tie flip could
     break the repetition the drafter feeds on."""
-    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.engine import Request, ServeConfig, ServeEngine
 
     rng = np.random.default_rng(seed)
     prompts = [np.tile(rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
@@ -412,10 +422,12 @@ def _spec_decode_scenario(csv_rows, params, cfg, rt, *, requests: int = 6,
     for axis, ert in axes.items():
         outs, mets = {}, {}
         for spec in (False, True):
-            eng = ServeEngine(params, cfg, batch_slots=slots,
-                              max_seq=max_seq, quantize="sp2_4", rt=ert,
-                              kv_layout="paged", spec_decode=spec,
-                              spec_k=spec_k if spec else None)
+            eng = ServeEngine(params, cfg,
+                              ServeConfig(batch_slots=slots, max_seq=max_seq,
+                                          quantize="sp2_4", kv_layout="paged",
+                                          spec_decode=spec,
+                                          spec_k=spec_k if spec else None),
+                              rt=ert)
             for i, p in enumerate(prompts):        # warmup: pay compiles
                 eng.submit(Request(rid=i, prompt=p,
                                    max_new_tokens=new_tokens))
@@ -479,7 +491,7 @@ def _bursty_scenario(csv_rows, params, cfg, rt, *, seed: int = 3) -> dict:
     per-request outputs bit-identical fifo vs cb, plain AND SPx-quantized
     pools (the acceptance criterion for the continuous-batching PR)."""
     import jax
-    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.engine import Request, ServeConfig, ServeEngine
 
     page_size, slots, pool_pages, max_seq = 8, 2, 8, 48
     rng = np.random.default_rng(seed)
@@ -524,13 +536,17 @@ def _bursty_scenario(csv_rows, params, cfg, rt, *, seed: int = 3) -> dict:
     for axis, ert in axes.items():
         outs, mets = {}, {}
         for sched in ("fifo", "cb"):
-            eng = ServeEngine(params, cfg, batch_slots=slots,
-                              max_seq=max_seq, quantize="sp2_4", rt=ert,
-                              kv_layout="paged", page_size=page_size,
-                              pool_pages=pool_pages, scheduler=sched,
-                              prefix_cache=(sched == "cb"),
-                              prefix_cache_pages=(1 if sched == "cb"
-                                                  else None))
+            eng = ServeEngine(params, cfg,
+                              ServeConfig(batch_slots=slots, max_seq=max_seq,
+                                          quantize="sp2_4",
+                                          kv_layout="paged",
+                                          page_size=page_size,
+                                          pool_pages=pool_pages,
+                                          scheduler=sched,
+                                          prefix_cache=(sched == "cb"),
+                                          prefix_cache_pages=(
+                                              1 if sched == "cb" else None)),
+                              rt=ert)
             outs[sched] = drive(eng)
             mets[sched] = eng.metrics()
         cb, fifo = mets["cb"], mets["fifo"]
@@ -591,7 +607,7 @@ def _arch_matrix_scenario(csv_rows, rt, *, slots: int = 4,
     from repro.configs import get_config, reduced
     from repro.models import encdec as encdec_mod
     from repro.models import lm as lm_mod
-    from repro.serving.engine import Request, ServeEngine
+    from repro.serving.engine import Request, ServeConfig, ServeEngine
 
     def build(arch):
         if arch == "whisper-small":
@@ -617,9 +633,11 @@ def _arch_matrix_scenario(csv_rows, rt, *, slots: int = 4,
                    for n in (7, 19, 12)]
         outs, mets = {}, {}
         for layout, sched in (("dense", "fifo"), ("paged", "cb")):
-            eng = ServeEngine(params, cfg, batch_slots=slots,
-                              max_seq=max_seq, quantize=None, rt=rt,
-                              kv_layout=layout, scheduler=sched)
+            eng = ServeEngine(params, cfg,
+                              ServeConfig(batch_slots=slots, max_seq=max_seq,
+                                          quantize=None, kv_layout=layout,
+                                          scheduler=sched),
+                              rt=rt)
             for i, p in enumerate(prompts):
                 eng.submit(Request(
                     rid=i, prompt=p, max_new_tokens=new_tokens,
@@ -657,6 +675,116 @@ def _arch_matrix_scenario(csv_rows, rt, *, slots: int = 4,
     return report
 
 
+def sharded_child(*, requests: int = 8, slots: int = 4, max_seq: int = 64,
+                  new_tokens: int = 8, seed: int = 3) -> dict:
+    """The forced-host-device half of the sharded scenario: serve the
+    pinned workload at shards=1 and shards=2 and report throughput,
+    per-shard peak KV bytes and greedy agreement. Runs in the child
+    process ``_sharded_scenario`` spawns (``--sharded-child``) — the
+    parent keeps its real single-device topology."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import lm as lm_mod
+    from repro.runtime import Runtime
+    from repro.serving.engine import Request, ServeConfig, ServeEngine
+
+    # the pinned geometry from run(), plus n_kv_heads=2 so the 2-wide
+    # model axis gets one KV head per shard (reduced gemma-2b's single
+    # KV head can't split — it would silently replicate)
+    cfg = dataclasses.replace(reduced(get_config("gemma-2b"), vocab=32),
+                              head_dim=128, n_kv_heads=2)
+    rt = Runtime(impl="auto", q_chunk=64)
+    params = lm_mod.lm_init(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            int(rng.integers(4, max_seq // 2)))
+               .astype(np.int32) for _ in range(requests)]
+
+    out: dict = {"config": {"arch": cfg.name, "requests": requests,
+                            "batch_slots": slots, "max_seq": max_seq,
+                            "new_tokens": new_tokens,
+                            "n_kv_heads": cfg.n_kv_heads,
+                            "host_devices": jax.device_count()}}
+    outputs = {}
+    for shards in (1, 2):
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=slots, max_seq=max_seq,
+                                      quantize="sp2_4", kv_layout="paged",
+                                      page_size=16, shards=shards), rt=rt)
+        for i, p in enumerate(prompts):            # warmup: pay compiles
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=new_tokens))
+        eng.run()
+        eng.reset_metrics()
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=new_tokens))
+        done = eng.run()
+        outputs[shards] = {r.rid: r.output for r in done}
+        m = eng.metrics()
+        out[f"shards_{shards}"] = {
+            "tokens_per_s": m["tokens_per_s"],
+            "peak_kv_bytes": m["peak_kv_bytes"],
+            "peak_kv_bytes_per_shard": m["peak_kv_bytes_per_shard"],
+            "kv_sharded": m["kv_sharded"],
+            "kv_heads_per_shard": m["kv_heads_per_shard"]}
+    out["greedy_agreement"] = float(np.mean(
+        [outputs[1][i] == outputs[2][i] for i in range(requests)]))
+    return out
+
+
+def _sharded_scenario(csv_rows) -> dict:
+    """Tensor-parallel serving: spawn a child with 8 forced host devices
+    (the flag must precede jax backend init, so it cannot be set in this
+    process — repro.launch.hostdev owns the pattern), run
+    ``sharded_child`` there, and assert the sharded contract: greedy
+    outputs bit-identical across shard counts, 2-shard KV head-sharded
+    with per-shard peak bytes halved. Keys land in
+    BENCH_serving.json["sharded"] for the CI checks job."""
+    from repro.launch.hostdev import run_with_host_devices
+
+    print("\n== serving: tensor-parallel, 1 vs 2 shards (child with 8 "
+          "host devices) ==")
+    env = dict(os.environ)
+    src = os.path.join(REPO, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = run_with_host_devices(
+        [sys.executable, "-m", "benchmarks.serving_bench",
+         "--sharded-child"], 8, timeout=1800, env=env, cwd=REPO)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded child failed:\n{r.stdout[-2000:]}\n"
+                           f"{r.stderr[-4000:]}")
+    payload = None
+    for line in r.stdout.splitlines():
+        if line.startswith("SHARDED_JSON "):
+            payload = json.loads(line[len("SHARDED_JSON "):])
+    assert payload is not None, f"no SHARDED_JSON line:\n{r.stdout[-2000:]}"
+
+    s1, s2 = payload["shards_1"], payload["shards_2"]
+    for n, s in (("1", s1), ("2", s2)):
+        print(f"  shards={n}: {s['tokens_per_s']:8.1f} tok/s  "
+              f"peak KV/shard {s['peak_kv_bytes_per_shard'] / 2**10:7.2f} "
+              f"KiB")
+        csv_rows.append((f"serving/sharded_{n}_tok_per_s", 0.0,
+                         s["tokens_per_s"]))
+        csv_rows.append((f"serving/sharded_{n}_peak_kv_kib_per_shard", 0.0,
+                         s["peak_kv_bytes_per_shard"] / 2**10))
+    assert payload["greedy_agreement"] == 1.0, payload
+    assert s2["kv_sharded"] is True and s2["kv_heads_per_shard"] == 1, s2
+    assert s2["peak_kv_bytes_per_shard"] < s1["peak_kv_bytes_per_shard"], \
+        (s1, s2)
+    print(f"  greedy agreement {payload['greedy_agreement']:.0f}, "
+          f"per-shard peak KV {s1['peak_kv_bytes_per_shard']} B -> "
+          f"{s2['peak_kv_bytes_per_shard']} B")
+    csv_rows.append(("serving/sharded_greedy_agreement", 0.0,
+                     payload["greedy_agreement"]))
+    return payload
+
+
 if __name__ == "__main__":
-    rows: list = []
-    run(rows)
+    if "--sharded-child" in sys.argv:
+        print("SHARDED_JSON " + json.dumps(sharded_child()))
+    else:
+        rows: list = []
+        run(rows)

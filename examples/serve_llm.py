@@ -25,7 +25,7 @@ from repro.data.tokens import TokenStream
 from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 from repro.training import TrainConfig, TrainLoop, make_optimizer
 
 
@@ -100,9 +100,11 @@ def main(argv=None):
         ert = rt.replace(kv_quant=True, kv_scheme="spx_8_x3") if kvq else rt
         # explicit bools (not None) so a REPRO_PREFIX_CACHE=1 /
         # REPRO_SPEC_K environment can't silently flip the other axes
-        eng = ServeEngine(params, cfg, batch_slots=4, max_seq=64,
-                          quantize=scheme, rt=ert, kv_layout=layout,
-                          prefix_cache=share, spec_decode=spec)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=4, max_seq=64,
+                                      quantize=scheme, kv_layout=layout,
+                                      prefix_cache=share, spec_decode=spec),
+                          rt=ert)
         t0 = time.monotonic()
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p,

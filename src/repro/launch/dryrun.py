@@ -1,16 +1,18 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
 on the production meshes (16x16 single-pod; 2x16x16 multi-pod), print
 memory_analysis / cost_analysis, and dump a JSON artifact per cell that the
 roofline harness consumes.
+
+The production meshes need 512 devices; ``main()`` forces them via
+``launch/hostdev`` *at entry*, not at import — importing this module for
+``parse_collectives`` must not poison the importer's device topology.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
       --shape train_4k [--multi-pod]
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
 """
+import os
 
 import argparse
 import json
@@ -182,6 +184,11 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
 
 def main():
+    # the production meshes want 512 devices; forcing them here (before
+    # the first jax computation initializes the backend) keeps the flag
+    # out of importers of this module
+    from repro.launch.hostdev import set_host_device_count
+    set_host_device_count(512)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

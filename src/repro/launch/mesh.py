@@ -12,8 +12,8 @@ try:  # AxisType landed after jax 0.4.x; older versions infer Auto
 except ImportError:  # pragma: no cover
     AxisType = None
 
-__all__ = ["make_production_mesh", "make_host_mesh", "mesh_axis_kwargs",
-           "ambient_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_serving_mesh",
+           "mesh_axis_kwargs", "ambient_mesh"]
 
 
 def ambient_mesh(mesh):
@@ -45,3 +45,23 @@ def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (CPU tests)."""
     return jax.make_mesh((data, model), ("data", "model"),
                          **mesh_axis_kwargs(2))
+
+
+def make_serving_mesh(model: int = 1, devices=None):
+    """``(data=1, model)`` mesh over an *explicit* device slice.
+
+    Unlike ``make_host_mesh`` this never reaches for the global device
+    list when a slice is given, so a replica router can pin each engine
+    replica to its own disjoint devices. The data axis exists (size 1)
+    because the forward passes' sharding constraints name both axes.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = list(devices) if devices is not None else jax.devices()[:model]
+    if len(devs) != model:
+        raise ValueError(
+            f"make_serving_mesh(model={model}) needs exactly {model} "
+            f"devices, got {len(devs)}")
+    arr = np.empty((1, model), dtype=object)
+    arr[0, :] = devs
+    return Mesh(arr, ("data", "model"), **mesh_axis_kwargs(2))

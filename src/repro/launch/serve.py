@@ -32,12 +32,19 @@ the paged default) or 'fifo' (the synchronous head-blocks-queue
 baseline). --host-pages bounds the offload tier, --prefix-cache-pages
 bounds the cached-free prefix index (LRU eviction) — docs/SERVING.md.
 
+--shards runs the engine tensor-parallel over a ``model`` mesh axis
+(head-sharded KV pools, replicated block tables); --replicas stacks
+data-parallel engine replicas behind a least-loaded router. On CPU,
+force host devices first: XLA_FLAGS=--xla_force_host_platform_device_count=8
+(repro.launch.hostdev) — docs/SERVING.md, "Sharded serving".
+
 Env knobs that reach serving: REPRO_PAGE_SIZE (tokens per KV page),
 REPRO_PREFILL_CHUNK (chunked-prefill length), REPRO_PREFIX_CACHE=1
 (prefix cache default), REPRO_SPEC_K=N (speculative decoding default +
 window), REPRO_SCHEDULER / REPRO_HOST_PAGES / REPRO_PREFIX_CACHE_PAGES
-(scheduler + two-tier pool defaults), REPRO_BLOCKS_* / REPRO_AUTOTUNE
-(kernel tiles) — see docs/SERVING.md.
+(scheduler + two-tier pool defaults), REPRO_SHARDS / REPRO_REPLICAS
+(parallelism defaults), REPRO_BLOCKS_* / REPRO_AUTOTUNE (kernel tiles)
+— all resolved in one place, ServeConfig.resolve() (docs/SERVING.md).
 """
 from __future__ import annotations
 
@@ -55,7 +62,8 @@ from repro.core import spx
 from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime
-from repro.serving.engine import Request, ServeEngine
+from repro.serving import ReplicaRouter
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 
 
 def _run_streaming(eng, reqs, arrival_s: float):
@@ -151,6 +159,15 @@ def main(argv=None):
                     help="cached-free prefix index budget in pages — LRU "
                          "eviction past it (default unbounded, "
                          "REPRO_PREFIX_CACHE_PAGES sets the default)")
+    ap.add_argument("--shards", type=int, default=None, metavar="N",
+                    help="tensor-parallel shards over the 'model' mesh axis "
+                         "(paged layout; needs N devices — on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count; "
+                         "REPRO_SHARDS sets the default)")
+    ap.add_argument("--replicas", type=int, default=None, metavar="N",
+                    help="data-parallel engine replicas behind a "
+                         "least-loaded router, each with a per-replica "
+                         "page budget (REPRO_REPLICAS sets the default)")
     ap.add_argument("--kv-quant", action="store_true",
                     help="quantize the KV cache to codes+scale pages")
     ap.add_argument("--kv-scheme", default="spx_8_x3",
@@ -193,19 +210,22 @@ def main(argv=None):
     scheme = None if args.scheme == "none" else args.scheme
     rt = Runtime(impl="auto", q_chunk=256, kv_quant=args.kv_quant,
                  kv_scheme=args.kv_scheme)
-    eng = ServeEngine(params, cfg, batch_slots=args.slots,
-                      max_seq=args.max_seq, quantize=scheme,
-                      rt=rt,
-                      kv_layout=args.kv_layout, page_size=args.page_size,
-                      pool_pages=args.pool_pages,
-                      prefill_chunk=args.prefill_chunk,
-                      kv_cache_dtype=(jnp.bfloat16 if args.kv_dtype == "bf16"
-                                      else jnp.float32),
-                      prefix_cache=args.prefix_cache,
-                      spec_decode=args.spec_decode, spec_k=args.spec_k,
-                      fused_decode=args.fused_decode,
-                      scheduler=args.scheduler, host_pages=args.host_pages,
-                      prefix_cache_pages=args.prefix_cache_pages)
+    sconf = ServeConfig(
+        batch_slots=args.slots, max_seq=args.max_seq, quantize=scheme,
+        kv_layout=args.kv_layout, page_size=args.page_size,
+        pool_pages=args.pool_pages, prefill_chunk=args.prefill_chunk,
+        kv_cache_dtype=(jnp.bfloat16 if args.kv_dtype == "bf16"
+                        else jnp.float32),
+        prefix_cache=args.prefix_cache,
+        spec_decode=args.spec_decode, spec_k=args.spec_k,
+        fused_decode=args.fused_decode,
+        scheduler=args.scheduler, host_pages=args.host_pages,
+        prefix_cache_pages=args.prefix_cache_pages,
+        shards=args.shards, replicas=args.replicas).resolve(cfg)
+    if sconf.replicas > 1:
+        eng = ReplicaRouter(params, cfg, sconf, rt=rt)
+    else:
+        eng = ServeEngine(params, cfg, sconf, rt=rt)
 
     rng = np.random.default_rng(args.seed)
     sys_prompt = (rng.integers(0, cfg.vocab_size, args.shared_prefix)
@@ -239,22 +259,35 @@ def main(argv=None):
     dt = time.monotonic() - t0
     n_tok = sum(len(r.output) for r in done)
     m = eng.metrics()
+    # router metrics carry fleet sums; per-engine facts (layout, dtype,
+    # pool geometry) live in the untouched per-replica dicts
+    m0 = m["per_replica"][0] if sconf.replicas > 1 else m
     print(f"[serve] {len(done)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s), median TTFT {m['ttft_p50_ms']:.0f}ms "
-          f"scheme={scheme} layout={m['kv_layout']} "
-          f"kv={m['kv_scheme']}/{m['kv_cache_dtype']}")
+          f"scheme={scheme} layout={m0['kv_layout']} "
+          f"kv={m0['kv_scheme']}/{m0['kv_cache_dtype']}")
+    if sconf.replicas > 1:
+        print(f"[serve] router: {m['replicas']} replicas x {m['shards']} "
+              f"shard(s), finished per replica "
+              f"{m['requests_per_replica']}, fleet peak KV "
+              f"{m['peak_kv_bytes'] / 2**20:.2f} MiB")
     if args.stream:
         sttft = sorted(delivered[r.rid] - r.t_enqueue for r in done)
         print(f"[serve] streaming: delivered TTFT p50 "
               f"{1e3 * sttft[len(sttft) // 2]:.0f}ms over "
               f"{len(done)} consumers (whole-request latency p50 "
               f"{m['latency_p50_ms']:.0f}ms)")
-    if m["kv_layout"] == "paged":
+    if sconf.replicas == 1 and m["kv_layout"] == "paged":
         print(f"[serve] pages: {m['n_pages']} x {m['page_size']} tok, "
               f"occupancy mean {m['occupancy_mean']:.2f} / "
               f"peak {m['occupancy_peak']:.2f}, "
               f"peak KV {m['peak_kv_bytes'] / 2**20:.2f} MiB, "
               f"denials {m['admission_denials']}")
+        if m["shards"] > 1:
+            print(f"[serve] sharded: {m['shards']} shards, kv_sharded="
+                  f"{m['kv_sharded']}, {m['kv_heads_per_shard']} KV "
+                  f"head(s)/shard, peak KV/shard "
+                  f"{m['peak_kv_bytes_per_shard'] / 2**20:.2f} MiB")
         if m["slab_bytes_per_seq"] or m["cross_bytes_per_entry"]:
             print(f"[serve] state cache: peak "
                   f"{m['peak_state_bytes'] / 2**20:.2f} MiB "

@@ -51,8 +51,9 @@ from repro.core.pipeline import HwSpec, TPU_V5E, plan_matmul_blocks
 __all__ = [
     "MatmulBlocks", "AttentionBlocks", "KVPagePlan", "FusedDecodePlan",
     "StateReservation",
+    "ShardBudget",
     "plan_matmul", "plan_attention", "plan_kv_pages", "plan_seq_pages",
-    "plan_resume_pages", "plan_seq_state",
+    "plan_resume_pages", "plan_seq_state", "plan_shard_budget",
     "plan_fused_decode", "fused_decode_key", "matmul_candidates",
     "autotune_enabled", "measured_best", "measured_plan",
     "clear_plan_cache", "DEFAULT_BM", "VMEM_BUDGET_FRACTION",
@@ -400,6 +401,87 @@ def plan_seq_state(n_tokens: int, page_size: int, *,
 
 
 # ---------------------------------------------------------------------------
+# Per-shard budgets (tensor-parallel serving)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardBudget:
+    """Where one model shard's serving memory actually goes when the paged
+    pools are head-sharded over a ``model`` axis of size ``shards``.
+
+    kv_sharded            the pool's KV-head axis divides evenly, so each
+                          shard holds ``kv_heads_per_shard`` of it; when
+                          False the pool replicates (each shard holds all
+                          heads) and the per-shard numbers equal global
+    kv_heads_per_shard    KV heads resident per shard
+    page_bytes            ONE page's bytes on one shard (all layers)
+    pool_bytes            the whole page pool's bytes on one shard
+    slab_bytes            recurrent-slab bytes on one shard — slabs
+                          replicate (sequence-private state, no head axis)
+    vmem_bytes            the decode kernel's per-step working set; the
+                          kernel grids over (slot, kv_head, page) so the
+                          per-step set is one head's page pair regardless
+                          of how many heads the shard holds — sharding
+                          changes grid length, not VMEM pressure
+    """
+    shards: int
+    kv_sharded: bool
+    kv_heads_per_shard: int
+    page_bytes: int
+    pool_bytes: int
+    slab_bytes: int
+    vmem_bytes: int
+
+
+@functools.lru_cache(maxsize=256)
+def _plan_shard_budget_cached(n_kv_heads: int, dh: int, shards: int,
+                              page_size: int, n_pages: int, n_layers: int,
+                              slab_bytes: int, tok_side_bytes: int,
+                              vmem_bytes: int) -> ShardBudget:
+    kv_sharded = shards > 1 and n_kv_heads % shards == 0
+    heads = n_kv_heads // shards if kv_sharded else n_kv_heads
+    # K + V sides, all paged layers, the shard's resident heads
+    page_bytes = 2 * page_size * tok_side_bytes * heads * n_layers
+    return ShardBudget(shards=shards, kv_sharded=kv_sharded,
+                       kv_heads_per_shard=heads, page_bytes=page_bytes,
+                       pool_bytes=page_bytes * n_pages,
+                       slab_bytes=slab_bytes, vmem_bytes=vmem_bytes)
+
+
+def plan_shard_budget(n_kv_heads: int, dh: int, *, shards: int = 1,
+                      page_size: int, n_pages: int, n_layers: int = 1,
+                      slab_bytes: int = 0, act_bytes: int = 2,
+                      kv_scheme: str | None = None,
+                      hw: HwSpec = TPU_V5E) -> ShardBudget:
+    """Per-shard page/slab/VMEM budget for a tensor-parallel paged engine.
+
+    The page pool is ``(layers, n_pages, Hkv, page_size, dh)`` per K/V
+    side; sharding splits the ``Hkv`` axis over ``shards`` model-parallel
+    devices when it divides (else the pool replicates — same
+    divisibility-or-replicate rule ``ShardingPolicy`` applies to params).
+    ``slab_bytes`` (recurrent state, per-sequence) never shards.
+    ``kv_scheme`` switches the per-token byte model to the quantized
+    codes+scale layout, same as ``plan_kv_pages``. The VMEM figure is the
+    decode kernel's per-step working set and is deliberately
+    shard-neutral: the kernel's grid covers the shard's heads
+    sequentially, so fewer resident heads shorten the grid without
+    changing the per-step footprint.
+    """
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    if kv_scheme is not None:
+        from repro.core.spx import kv_token_side_bytes
+        tok_side = kv_token_side_bytes(dh)
+    else:
+        tok_side = dh * act_bytes
+    plan = plan_kv_pages(n_kv_heads, dh, act_bytes=act_bytes,
+                         kv_scheme=kv_scheme, hw=hw)
+    return _plan_shard_budget_cached(n_kv_heads, dh, shards, page_size,
+                                     n_pages, n_layers, slab_bytes,
+                                     tok_side, plan.vmem_bytes)
+
+
+# ---------------------------------------------------------------------------
 # Fused ragged-decode megakernel sizing (serving)
 # ---------------------------------------------------------------------------
 
@@ -547,4 +629,5 @@ def clear_plan_cache():
     _plan_matmul_cached.cache_clear()
     _plan_attention_cached.cache_clear()
     _plan_kv_pages_cached.cache_clear()
+    _plan_shard_budget_cached.cache_clear()
     _MEASURED.clear()

@@ -69,8 +69,8 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import os
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -78,17 +78,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.launch.mesh import make_serving_mesh
 from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.nn.layers import quantize_params
 from repro.runtime import Runtime, planner
+from repro.serving.config import LEGACY_KNOBS, ServeConfig
 from repro.serving.kv_cache import (StateCache, cross_kv_bytes_per_seq,
                                     kv_bytes_per_token,
                                     ssm_state_bytes_per_seq)
-from repro.serving.spec import DEFAULT_SPEC_K, PromptLookupDrafter
+from repro.serving.spec import PromptLookupDrafter
 from repro.serving.stream import StreamState, TokenStream
+from repro.sharding import ShardingPolicy
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeConfig", "ServeEngine"]
 
 #: every engine timestamp (t_enqueue / t_first_token / t_done, wall
 #: accounting) comes through this hook. It must be a *monotonic* clock:
@@ -97,12 +100,6 @@ __all__ = ["Request", "ServeEngine"]
 #: latency percentile negative. Module-level so the fake-clock
 #: regression test can monkeypatch it.
 _now = time.monotonic
-
-#: chunk length for chunked prefill when the caller doesn't pass one;
-#: REPRO_PREFILL_CHUNK=N overrides. Ragged final chunks are padded up to
-#: the next power of two so the engine compiles O(log chunk) variants,
-#: not one per prompt length.
-_DEFAULT_PREFILL_CHUNK = 32
 
 
 @dataclasses.dataclass
@@ -145,35 +142,59 @@ def _pad_pow2(n: int, cap: int) -> int:
 
 
 class ServeEngine:
-    def __init__(self, params, cfg: ArchConfig, *, batch_slots: int = 4,
-                 max_seq: int = 256, quantize: str | None = "sp2_4",
-                 rt: Runtime | None = None, seed: int = 0,
-                 kv_layout: str = "auto", page_size: int | None = None,
-                 pool_pages: int | None = None,
-                 prefill_chunk: int | None = None,
-                 kv_cache_dtype=jnp.float32,
-                 prefix_cache: bool | None = None,
-                 spec_decode: bool | None = None,
-                 spec_k: int | None = None,
-                 fused_decode: bool | None = None,
-                 scheduler: str | None = None,
-                 host_pages: int | None = None,
-                 prefix_cache_pages: int | None = None):
+    def __init__(self, params, cfg: ArchConfig,
+                 config: ServeConfig | None = None, *,
+                 rt: Runtime | None = None, devices=None, **legacy):
+        # one-PR migration shim: the old per-knob keyword arguments are
+        # still accepted, forwarded into a ServeConfig with a
+        # DeprecationWarning. ServeConfig is the sole knob path.
+        if config is not None and not isinstance(config, ServeConfig):
+            raise TypeError(
+                f"config must be a ServeConfig, got {type(config).__name__}")
+        if legacy:
+            unknown = sorted(set(legacy) - LEGACY_KNOBS)
+            if unknown:
+                raise TypeError(
+                    f"ServeEngine() got unexpected keyword argument(s) "
+                    f"{unknown} — serving knobs live on ServeConfig")
+            warnings.warn(
+                "passing serving knobs as ServeEngine keyword arguments "
+                "is deprecated — construct a ServeConfig instead: "
+                f"ServeEngine(params, cfg, ServeConfig({', '.join(sorted(legacy))}))",
+                DeprecationWarning, stacklevel=2)
+            config = (config or ServeConfig()).replace(**legacy)
         self.cfg = cfg
         self.rt = rt or Runtime(impl="auto", q_chunk=256)
-        self.batch_slots = batch_slots
-        self.max_seq = max_seq
-        self.kv_cache_dtype = jnp.dtype(kv_cache_dtype)
+        # ALL env fallback + cross-knob validation happens here, nowhere
+        # else in the engine (docs/SERVING.md "ServeConfig")
+        sc = (config or ServeConfig()).resolve(cfg)
+        self.config = sc
+        if sc.replicas > 1:
+            raise ValueError(
+                f"replicas={sc.replicas} is a router knob — build a "
+                "repro.serving.ReplicaRouter for data-parallel replicas "
+                "(a bare ServeEngine is always one replica)")
+        self.batch_slots = sc.batch_slots
+        self.max_seq = sc.max_seq
+        self.kv_cache_dtype = jnp.dtype(sc.kv_cache_dtype)
+        self.kv_layout = sc.kv_layout
+        self.prefix_cache = sc.prefix_cache
+        self.spec_k = sc.spec_k
+        self.fused_decode = sc.fused_decode
+        self.scheduler = sc.scheduler
+        self.host_pages = sc.host_pages
+        self.prefix_cache_pages = sc.prefix_cache_pages
+        self.shards = sc.shards
         # KV quantization (scheme-parameterized, docs/QUANTIZATION.md):
         # whenever rt.kv_quant is set the cache layout is uint8 codes +
         # f32 scale and kv_cache_dtype is IGNORED by the cache allocators
         # (metrics() then reports the layout, not the dtype arg)
         self.kv_scheme = self.rt.kv_scheme if self.rt.kv_quant else None
-        if quantize:
-            params = quantize_params(params, quantize)
+        if sc.quantize:
+            params = quantize_params(params, sc.quantize)
         self.params = params
         # base for per-request sampling keys (Request.seed overrides)
-        self._base_key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(sc.seed)
 
         # layer pattern is the routing unit for the unified state cache:
         # attn/xdec mixers page token KV, SSM mixers (mamba/mlstm/slstm)
@@ -186,157 +207,35 @@ class ServeEngine:
         self._has_slab = bool(mixers & {"mamba", "mlstm", "slstm"})
         self._has_cross = bool(cfg.enc_dec)
 
-        if kv_layout == "auto":
-            # every supported pattern serves paged now (SSM, hybrid,
-            # enc-dec, M-RoPE included); dense remains as the
-            # differential-test baseline
-            kv_layout = "paged"
-        if kv_layout not in ("paged", "dense"):
-            raise ValueError(
-                f"kv_layout must be 'paged', 'dense' or 'auto', "
-                f"got {kv_layout!r}")
-        self.kv_layout = kv_layout
-
-        # shared-prefix KV page reuse (paged, token-KV-only patterns).
-        # None = read the env default; an env-enabled cache degrades
-        # silently where unsupported, an explicit True there is a caller
-        # error with the actual failing predicate(s) enumerated.
-        explicit_prefix = prefix_cache is not None
-        if prefix_cache is None:
-            prefix_cache = os.environ.get(
-                "REPRO_PREFIX_CACHE", "").lower() in ("1", "true")
-        prefix_gaps = []
-        if kv_layout != "paged":
-            prefix_gaps.append("kv_layout='dense' — per-slot rows, "
-                               "nothing to share")
-        if self._has_slab:
-            prefix_gaps.append(
-                f"recurrent mixer(s) {self._slab_mixers()} in "
-                f"pattern={self._decode_cfg.pattern} — slab state is "
-                "per-sequence, not per-page")
-        if self._has_cross:
-            prefix_gaps.append(
-                "enc_dec=True — decoder KV depends on the encoder "
-                "output, so prompt pages are not shareable by token "
-                "content (the cross region already shares the encoder "
-                "pass by frames)")
-        if prefix_cache and prefix_gaps:
-            if explicit_prefix:
+        # tensor parallelism (shards > 1): build a (data=1, model=shards)
+        # mesh over an explicit device slice, place params by the same
+        # ShardingPolicy the dry-run uses (Megatron TP), head-shard the
+        # paged pools, and thread the mesh through Runtime so the forward
+        # passes plant their sharding constraints. GSPMD partitions the
+        # jitted steps; block tables and token batches stay replicated.
+        self.mesh = None
+        self._policy = None
+        if sc.shards > 1:
+            devs = (list(devices) if devices is not None
+                    else list(jax.devices()))
+            if len(devs) < sc.shards:
                 raise ValueError(
-                    "prefix_cache=True is unsupported here: "
-                    + "; ".join(prefix_gaps))
-            prefix_cache = False
-        self.prefix_cache = bool(prefix_cache)
+                    f"shards={sc.shards} needs at least {sc.shards} "
+                    f"devices, have {len(devs)} — on CPU set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=N "
+                    "before jax initializes (repro.launch.hostdev)")
+            self.mesh = make_serving_mesh(model=sc.shards,
+                                          devices=devs[:sc.shards])
+            self.rt = self.rt.replace(mesh=self.mesh, model_axis="model",
+                                      data_axes=("data",))
+            self._policy = ShardingPolicy(cfg, self.mesh, fsdp=False,
+                                          parallelism="tp")
+            self.params = jax.device_put(
+                self.params,
+                self._policy.named(self._policy.param_specs(self.params)))
 
-        # speculative decoding (paged only — the verify window rides the
-        # paged chunk path). None = read the env default (REPRO_SPEC_K=N
-        # enables with window N); passing spec_k alone also enables —
-        # a window size IS the intent, silently ignoring it would let a
-        # caller benchmark speculation that never ran. Mirroring
-        # prefix_cache, an env-enabled default degrades silently for a
-        # dense engine; an explicit spec_decode=True (or spec_k=) there
-        # is a caller error.
-        env_k = int(os.environ.get("REPRO_SPEC_K", "0") or 0)
-        if spec_k is not None and spec_k < 1:
-            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
-        if spec_decode is False and spec_k is not None:
-            raise ValueError(
-                f"spec_k={spec_k} with spec_decode=False — drop one")
-        explicit_spec = spec_decode is not None or spec_k is not None
-        if spec_decode is None:
-            spec_decode = env_k > 0 or spec_k is not None
-        spec_gaps = []
-        if kv_layout != "paged":
-            spec_gaps.append("kv_layout='dense' — the verify step scores "
-                             "the draft window through the paged chunk "
-                             "path")
-        if self._has_slab:
-            spec_gaps.append(
-                f"recurrent mixer(s) {self._slab_mixers()} in "
-                f"pattern={self._decode_cfg.pattern} — slab updates are "
-                "destructive, a rejected draft tail cannot roll back")
-        if spec_decode and spec_gaps:
-            if explicit_spec:
-                raise ValueError("spec_decode is unsupported here: "
-                                 + "; ".join(spec_gaps))
-            spec_decode = False
-        if spec_decode:
-            self.spec_k = (spec_k if spec_k is not None
-                           else (env_k or DEFAULT_SPEC_K))
-            if self.spec_k < 1:
-                raise ValueError(
-                    f"spec_k must be >= 1, got {self.spec_k} "
-                    "(check REPRO_SPEC_K)")
-        else:
-            self.spec_k = 0
-
-        # fused ragged-decode megakernel (paged only): every decode tick —
-        # plain decode AND the draft-verify window — is one
-        # ``lm_paged_fused_step`` call whose per-layer attention is a
-        # single ``paged_decode_ragged`` launch over the batch's ragged
-        # (slot, attend_len) grid. Default ON for paged engines
-        # (REPRO_FUSED_DECODE=0 opts out); mirroring the other knobs, the
-        # env default degrades silently for a dense engine while an
-        # explicit True there is a caller error.
-        explicit_fused = fused_decode is not None
-        if fused_decode is None:
-            fused_decode = os.environ.get(
-                "REPRO_FUSED_DECODE", "1").lower() not in ("0", "false")
-        if fused_decode and kv_layout != "paged":
-            if explicit_fused:
-                raise ValueError(
-                    "fused_decode=True needs kv_layout='paged' — the "
-                    "megakernel decodes through the paged page pools")
-            fused_decode = False
-        self.fused_decode = bool(fused_decode)
-
-        # scheduler: "cb" (continuous batching — priority admission with
-        # preemption + KV offload, the paged default) or "fifo" (the
-        # original synchronous head-blocks-queue policy, kept as the
-        # differential-test baseline). REPRO_SCHEDULER overrides the
-        # default; mirroring the other knobs, an env-selected "cb"
-        # degrades silently to fifo for a dense engine while an explicit
-        # one there is a caller error (preemption snapshots live in the
-        # page pool — the dense layout has nothing to offload).
-        explicit_sched = scheduler is not None
-        if scheduler is None:
-            scheduler = (os.environ.get("REPRO_SCHEDULER", "")
-                         or ("cb" if kv_layout == "paged" else "fifo"))
-        if scheduler not in ("fifo", "cb"):
-            raise ValueError(
-                f"scheduler must be 'fifo' or 'cb', got {scheduler!r} "
-                "(check REPRO_SCHEDULER)")
-        if scheduler == "cb" and kv_layout != "paged":
-            if explicit_sched:
-                raise ValueError(
-                    "scheduler='cb' needs kv_layout='paged' — preemption "
-                    "offloads KV pages and the dense layout has none")
-            scheduler = "fifo"
-        self.scheduler = scheduler
-
-        # two-tier pool knobs (paged only): host_pages bounds the host
-        # offload tier, prefix_cache_pages bounds the cached-free prefix
-        # index (LRU eviction past it). Same explicit-raise / env-degrade
-        # contract as every other paged-only knob.
-        env_host = os.environ.get("REPRO_HOST_PAGES", "")
-        env_cache = os.environ.get("REPRO_PREFIX_CACHE_PAGES", "")
-        explicit_tier = host_pages is not None or prefix_cache_pages is not None
-        if host_pages is None and env_host:
-            host_pages = int(env_host)
-        if prefix_cache_pages is None and env_cache:
-            prefix_cache_pages = int(env_cache)
-        if kv_layout != "paged" and (host_pages is not None
-                                     or prefix_cache_pages is not None):
-            if explicit_tier:
-                raise ValueError(
-                    "host_pages / prefix_cache_pages need "
-                    "kv_layout='paged' — the dense layout has no page pool")
-            host_pages = prefix_cache_pages = None
-        self.host_pages = host_pages
-        self.prefix_cache_pages = prefix_cache_pages
-
-        self.slot_req: list[Optional[Request]] = [None] * batch_slots
-        self.slot_pos = np.zeros(batch_slots, np.int64)   # tokens in cache
+        self.slot_req: list[Optional[Request]] = [None] * self.batch_slots
+        self.slot_pos = np.zeros(self.batch_slots, np.int64)  # tokens held
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         # per-rid delivery state (serving/stream.py): created at submit,
@@ -368,15 +267,34 @@ class ServeEngine:
         #: work now raises under strict=True and flips this flag)
         self.drained = True
 
-        if kv_layout == "paged":
-            self._init_paged(page_size, pool_pages, prefill_chunk)
+        if sc.kv_layout == "paged":
+            self._init_paged()
         else:
             self._init_dense()
+        if self.mesh is not None:
+            # head-shard the paged KV/cross pools over the model axis
+            # (replicated where Hkv doesn't divide); slabs replicate.
+            # Committing the initial placement is enough — the donated
+            # cache argument keeps whatever sharding GSPMD settles on.
+            specs = self._policy.paged_state_specs(self.caches)
+            self.caches = jax.device_put(self.caches,
+                                         self._policy.named(specs))
 
     def _slab_mixers(self) -> list[str]:
         """The recurrent mixer kinds present in the decode pattern."""
         return sorted({s.split("+")[0] for s in self._decode_cfg.pattern}
                       & {"mamba", "mlstm", "slstm"})
+
+    def _paged_layers(self) -> int:
+        """Layer-slot count of the token-KV page pools (the pools'
+        leading dim — what one page spans byte-wise)."""
+        n = 0
+        for path, leaf in jax.tree_util.tree_leaves_with_path(self.caches):
+            keys = [str(getattr(k, "key", getattr(k, "name", "")))
+                    for k in path]
+            if "kp" in keys:
+                n = max(n, int(leaf.shape[0]))
+        return max(n, 1)
 
     # -- layout-specific setup ----------------------------------------------
 
@@ -407,22 +325,24 @@ class ServeEngine:
                                          dtype=self.kv_cache_dtype,
                                          kv_quant=self.rt.kv_quant)
 
-    def _init_paged(self, page_size, pool_pages, prefill_chunk):
+    def _init_paged(self):
         cfg = self.cfg
         dcfg = self._decode_cfg
+        sc = self.config
         if self._has_pages:
             rep = dcfg.n_heads // dcfg.n_kv_heads
             plan = planner.plan_kv_pages(
                 dcfg.n_kv_heads, dcfg.dh, rep=rep,
                 act_bytes=self.kv_cache_dtype.itemsize,
                 kv_scheme=self.kv_scheme)
-            self.page_size = min(page_size or plan.page_size, self.max_seq)
+            self.page_size = min(sc.page_size or plan.page_size,
+                                 self.max_seq)
             self.pages_per_seq = -(-self.max_seq // self.page_size)
             # default pool = the dense engine's worst case, so
             # paged-vs-dense comparisons start from equal budgets; pass a
             # smaller pool to get admission backpressure
             # (tests/test_serving.py exercises this)
-            n_pages = pool_pages or self.batch_slots * self.pages_per_seq
+            n_pages = sc.pool_pages or self.batch_slots * self.pages_per_seq
         else:
             # pageless (pure-SSM pattern): no mixer writes token KV, the
             # pool degenerates to the slab region only
@@ -438,14 +358,8 @@ class ServeEngine:
                                n_cross=self._n_cross,
                                host_pages=self.host_pages,
                                cache_pages=self.prefix_cache_pages)
-        self.prefill_chunk = (prefill_chunk
-                              or int(os.environ.get("REPRO_PREFILL_CHUNK",
-                                                    0))
-                              or _DEFAULT_PREFILL_CHUNK)
-        if self.prefill_chunk < 1:
-            raise ValueError(
-                f"prefill_chunk must be >= 1, got {self.prefill_chunk} "
-                "(check REPRO_PREFILL_CHUNK)")
+        # env fallback + validation happened in ServeConfig.resolve()
+        self.prefill_chunk = sc.prefill_chunk
         if cfg.enc_dec:
             self.caches = encdec_mod.encdec_paged_init_caches(
                 cfg, self.pool.n_pages, self.page_size,
@@ -898,6 +812,24 @@ class ServeEngine:
                      "draft_acceptance_rate":
                          self._spec_accepted / self._spec_proposed
                          if self._spec_proposed else 0.0}
+            if self._has_pages:
+                # per-shard budget (planner): how one model shard's slice
+                # of the pool actually bills. shards=1 degenerates to the
+                # global numbers.
+                dcfg = self._decode_cfg
+                budget = planner.plan_shard_budget(
+                    dcfg.n_kv_heads, dcfg.dh, shards=self.shards,
+                    page_size=self.page_size, n_pages=self.pool.n_pages,
+                    n_layers=self._paged_layers(),
+                    slab_bytes=int(slab_bytes),
+                    act_bytes=self.kv_cache_dtype.itemsize,
+                    kv_scheme=self.kv_scheme)
+                paged.update(
+                    kv_sharded=budget.kv_sharded,
+                    kv_heads_per_shard=budget.kv_heads_per_shard,
+                    pool_bytes_per_shard=budget.pool_bytes,
+                    peak_kv_bytes_per_shard=int(
+                        st.peak_pages_in_use * budget.page_bytes))
         else:
             # dense bills every slot its worst case up front: max_seq of
             # token KV plus the full recurrent slab and a private cross
@@ -909,6 +841,7 @@ class ServeEngine:
         return {
             "kv_layout": self.kv_layout,
             "scheduler": self.scheduler,
+            "shards": self.shards,
             "undrained_runs": self._undrained_runs,
             "drained": self.drained,
             "kv_scheme": self.kv_scheme or "none",

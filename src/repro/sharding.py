@@ -229,6 +229,33 @@ class ShardingPolicy:
 
         return jax.tree_util.tree_map_with_path(leaf, caches_shape)
 
+    def paged_state_specs(self, caches: Any):
+        """Specs for the serving engine's paged StateCache pytree.
+
+        Token-KV page pools (``kp``/``vp``, ``(P, n_pages, Hkv, page_size,
+        dh)``) and read-only cross entries (``xk``/``xv``, ``(P, n_cross,
+        Hkv, S_enc, dh)``) shard their KV-head axis over the model axis
+        when it divides — including the ``codes``/``scale`` children of a
+        quantized pool, which share the head axis. Everything else
+        (recurrent slabs, conv states) is per-sequence with no head axis
+        and replicates. Block tables and write cursors live host-side and
+        never enter this tree."""
+        pool_keys = ("kp", "vp", "xk", "xv")
+
+        def leaf(path, x):
+            keys = _path_keys(path)
+            shape = tuple(x.shape)
+            nd = len(shape)
+            kv_key = keys[-1] in pool_keys or (
+                len(keys) >= 2 and keys[-2] in pool_keys
+                and keys[-1] in ("codes", "scale"))
+            if kv_key and nd == 5 and self.n_model > 1 \
+                    and _div(shape[2], self.n_model):
+                return P(None, None, self.model_axis, None, None)
+            return P(*([None] * nd))
+
+        return jax.tree_util.tree_map_with_path(leaf, caches)
+
     def _batch_axes(self, b: int):
         """Largest prefix of data axes that divides the batch."""
         axes = []

@@ -31,7 +31,7 @@ from repro.kernels import ops
 from repro.models import lm as lm_mod
 from repro.nn.attention import quantize_kv
 from repro.runtime import Runtime, planner
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -164,9 +164,10 @@ def test_fused_step_single_trace_across_ragged_ticks():
 def test_engine_fused_tick_is_one_compile_one_launch():
     cfg = _tiny_cfg()
     params = lm_mod.lm_init(jax.random.PRNGKey(3), cfg)
-    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64,
-                      quantize=None, rt=RT, kv_layout="paged",
-                      fused_decode=True)
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=2, max_seq=64, quantize=None,
+                                  kv_layout="paged", fused_decode=True),
+                      rt=RT)
     rng = np.random.default_rng(3)
     for i in range(4):
         p = rng.integers(0, cfg.vocab_size,
@@ -192,11 +193,12 @@ def _drive(params, cfg, prompts, *, fused, kv_quant=False, spec=False,
            new_tokens=8):
     rt = dataclasses.replace(RT, kv_quant=kv_quant,
                              kv_scheme="spx_8_x3" if kv_quant else RT.kv_scheme)
-    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64,
-                      quantize="sp2_4", rt=rt, kv_layout="paged",
-                      fused_decode=fused,
-                      spec_decode=True if spec else None,
-                      spec_k=3 if spec else None)
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=2, max_seq=64, quantize="sp2_4",
+                                  kv_layout="paged", fused_decode=fused,
+                                  spec_decode=True if spec else None,
+                                  spec_k=3 if spec else None),
+                      rt=rt)
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p, max_new_tokens=new_tokens))
     out = {r.rid: list(r.output) for r in eng.run()}
@@ -236,9 +238,10 @@ def test_fused_sampled_matches_unfused_key_chain():
                for _ in range(2)]
 
     def run(fused):
-        eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64,
-                          quantize=None, rt=RT, kv_layout="paged",
-                          fused_decode=fused)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=2, max_seq=64, quantize=None,
+                                      kv_layout="paged", fused_decode=fused),
+                          rt=RT)
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p, max_new_tokens=6,
                                temperature=0.8, seed=17 + i))
@@ -255,21 +258,25 @@ def test_fused_decode_knobs(monkeypatch):
     cfg = _tiny_cfg()
     params = lm_mod.lm_init(jax.random.PRNGKey(3), cfg)
     # default ON for paged engines
-    assert ServeEngine(params, cfg, quantize=None, rt=RT,
-                       kv_layout="paged").fused_decode is True
+    assert ServeEngine(
+        params, cfg, ServeConfig(quantize=None, kv_layout="paged"),
+        rt=RT).fused_decode is True
     # REPRO_FUSED_DECODE=0 flips the default off
     monkeypatch.setenv("REPRO_FUSED_DECODE", "0")
-    assert ServeEngine(params, cfg, quantize=None, rt=RT,
-                       kv_layout="paged").fused_decode is False
+    assert ServeEngine(
+        params, cfg, ServeConfig(quantize=None, kv_layout="paged"),
+        rt=RT).fused_decode is False
     monkeypatch.delenv("REPRO_FUSED_DECODE")
     # dense engine: the env/default degrades silently ...
-    dense = ServeEngine(params, cfg, quantize=None, rt=RT,
-                        kv_layout="dense")
+    dense = ServeEngine(params, cfg,
+                        ServeConfig(quantize=None, kv_layout="dense"), rt=RT)
     assert dense.fused_decode is False
     # ... but an explicit True there is a caller error
     with pytest.raises(ValueError, match="fused_decode"):
-        ServeEngine(params, cfg, quantize=None, rt=RT, kv_layout="dense",
-                    fused_decode=True)
+        ServeEngine(params, cfg,
+                    ServeConfig(quantize=None, kv_layout="dense",
+                                fused_decode=True),
+                    rt=RT)
 
 
 # ---------------------------------------------------------------------------

@@ -26,7 +26,7 @@ from repro.kernels import ops
 from repro.models import lm as lm_mod
 from repro.nn.attention import dequantize_kv, quantize_kv
 from repro.runtime import Runtime, planner
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 from repro.serving.kv_cache import PagePool, kv_bytes_per_token, pool_bytes
 
 jax.config.update("jax_platform_name", "cpu")
@@ -62,8 +62,10 @@ def test_paged_quant_engine_matches_dense_f32(scheme):
                for n in (3, 9, 17, 6, 12)]
 
     def drive(layout, rt=RT, **kw):
-        eng = ServeEngine(params, cfg, batch_slots=2, max_seq=32,
-                          quantize=None, rt=rt, kv_layout=layout, **kw)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=2, max_seq=32, quantize=None,
+                                      kv_layout=layout, **kw),
+                          rt=rt)
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
         return {r.rid: r.output for r in eng.run()}, eng

@@ -12,7 +12,7 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime, planner
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 from repro.serving.kv_cache import PagePool
 
 jax.config.update("jax_platform_name", "cpu")
@@ -378,9 +378,11 @@ CFG_PIN = dataclasses.replace(reduced(get_config("gemma-2b"), vocab=32),
 
 
 def _drive(params, rt, prompts, order, slots, prefix_on):
-    eng = ServeEngine(params, CFG_PIN, batch_slots=slots, max_seq=48,
-                      quantize="sp2_4", rt=rt, kv_layout="paged",
-                      page_size=8, prefix_cache=prefix_on)
+    eng = ServeEngine(params, CFG_PIN,
+                      ServeConfig(batch_slots=slots, max_seq=48,
+                                  quantize="sp2_4", kv_layout="paged",
+                                  page_size=8, prefix_cache=prefix_on),
+                      rt=rt)
     for i in order:
         eng.submit(Request(rid=i, prompt=prompts[i], max_new_tokens=3))
     out = {r.rid: r.output for r in eng.run()}
@@ -416,8 +418,10 @@ def test_engine_greedy_invariant_to_schedule_knobs(kvq):
 def _mini_engine(**kw):
     cfg = reduced(get_config("granite-3-8b"))
     params = lm_mod.lm_init(jax.random.PRNGKey(0), cfg)
-    return ServeEngine(params, cfg, batch_slots=2, max_seq=16,
-                       quantize=None, rt=RT, **kw)
+    return ServeEngine(params, cfg,
+                       ServeConfig(batch_slots=2, max_seq=16, quantize=None,
+                                   **kw),
+                       rt=RT)
 
 
 def _fake_request(rid, enq, ttft_s, lat_s):

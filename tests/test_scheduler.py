@@ -21,7 +21,7 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime, planner
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -80,9 +80,12 @@ def _storm(seed=7):
 def _run_fifo(params, rt):
     """The synchronous baseline: everything submitted up front in rid
     order, default knobs — the engine the tentpole replaced."""
-    eng = ServeEngine(params, CFG, batch_slots=SLOTS, max_seq=MAX_SEQ,
-                      quantize=None, rt=rt, kv_layout="paged",
-                      page_size=PAGE, pool_pages=POOL, scheduler="fifo")
+    eng = ServeEngine(params, CFG,
+                      ServeConfig(batch_slots=SLOTS, max_seq=MAX_SEQ,
+                                  quantize=None, kv_layout="paged",
+                                  page_size=PAGE, pool_pages=POOL,
+                                  scheduler="fifo"),
+                      rt=rt)
     for rid, prompt, max_new, _pri, _arr in _storm():
         eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=max_new))
     eng.run(max_steps=500)
@@ -91,12 +94,14 @@ def _run_fifo(params, rt):
 
 
 def _run_cb(params, rt, *, prefix, spec, fused):
-    eng = ServeEngine(params, CFG, batch_slots=SLOTS, max_seq=MAX_SEQ,
-                      quantize=None, rt=rt, kv_layout="paged",
-                      page_size=PAGE, pool_pages=POOL, scheduler="cb",
-                      prefix_cache=prefix,
-                      spec_decode=spec, spec_k=3 if spec else None,
-                      fused_decode=fused)
+    eng = ServeEngine(params, CFG,
+                      ServeConfig(batch_slots=SLOTS, max_seq=MAX_SEQ,
+                                  quantize=None, kv_layout="paged",
+                                  page_size=PAGE, pool_pages=POOL,
+                                  scheduler="cb", prefix_cache=prefix,
+                                  spec_decode=spec, spec_k=3 if spec else None,
+                                  fused_decode=fused),
+                      rt=rt)
     pending = sorted(_storm(), key=lambda r: r[4])
     for t in range(500):
         while pending and pending[0][4] <= t:
@@ -174,10 +179,12 @@ def test_preemption_every_tick_boundary_bit_identical(params, kvq):
     bit-identical to the un-preempted run. One engine per pool flavour,
     reused across injections so the jit cache pays once."""
     rt = RT_Q if kvq else RT
-    eng = ServeEngine(params, CFG, batch_slots=2, max_seq=48,
-                      quantize=None, rt=rt, kv_layout="paged",
-                      page_size=4, prefill_chunk=4, pool_pages=12,
-                      scheduler="cb", spec_decode=True, spec_k=3)
+    eng = ServeEngine(params, CFG,
+                      ServeConfig(batch_slots=2, max_seq=48, quantize=None,
+                                  kv_layout="paged", page_size=4,
+                                  prefill_chunk=4, pool_pages=12,
+                                  scheduler="cb", spec_decode=True, spec_k=3),
+                      rt=rt)
     rng = np.random.default_rng(11)
     prompt = np.concatenate([rng.integers(1, CFG.vocab_size, 4)
                              .astype(np.int32), _rep_tail(rng, 6)])
@@ -228,9 +235,11 @@ def test_run_surfaces_undrained_work(params):
     silently. Now: RuntimeError under strict (the default), drained flag
     + undrained_runs metric either way, and no work is lost — a later
     run() finishes exactly the tokens the request asked for."""
-    eng = ServeEngine(params, CFG, batch_slots=1, max_seq=48,
-                      quantize=None, rt=RT, kv_layout="paged",
-                      page_size=8, prefill_chunk=4, scheduler="cb")
+    eng = ServeEngine(params, CFG,
+                      ServeConfig(batch_slots=1, max_seq=48, quantize=None,
+                                  kv_layout="paged", page_size=8,
+                                  prefill_chunk=4, scheduler="cb"),
+                      rt=RT)
     prompt = np.arange(1, 13, dtype=np.int32)       # 3 prefill chunks
     eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
     with pytest.raises(RuntimeError, match="live work"):
@@ -251,8 +260,10 @@ def test_run_surfaces_undrained_work(params):
 # ---------------------------------------------------------------------------
 
 def test_scheduler_knob_validation(params):
-    mk = lambda **kw: ServeEngine(params, CFG, batch_slots=1, max_seq=32,
-                                  quantize=None, rt=RT, **kw)
+    mk = lambda **kw: ServeEngine(params, CFG,
+                                  ServeConfig(batch_slots=1, max_seq=32,
+                                              quantize=None, **kw),
+                                  rt=RT)
     with pytest.raises(ValueError, match="fifo.*cb|'fifo' or 'cb'"):
         mk(scheduler="lifo")
     # explicit cb / tier knobs on a dense engine are caller errors

@@ -11,7 +11,7 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -25,8 +25,9 @@ def _tiny_cfg():
 def test_engine_drains_queue_quantized():
     cfg = _tiny_cfg()
     params = lm_mod.lm_init(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(params, cfg, batch_slots=3, max_seq=64,
-                      quantize="sp2_8", rt=RT)
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=3, max_seq=64, quantize="sp2_8"),
+                      rt=RT)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 5 + i)
                     .astype(np.int32), max_new_tokens=6) for i in range(7)]
@@ -48,7 +49,8 @@ def test_engine_greedy_matches_reference_decode():
     rng = np.random.default_rng(1)
     prompt = rng.integers(0, cfg.vocab_size, 7).astype(np.int32)
 
-    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=32, quantize=None,
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=2, max_seq=32, quantize=None),
                       rt=RT)
     eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
     out_engine = eng.run()[0].output
@@ -78,12 +80,14 @@ def test_per_slot_positions_independent():
     p2 = rng.integers(0, cfg.vocab_size, 11).astype(np.int32)
 
     def solo(prompt, n=4):
-        eng = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                          quantize=None, rt=RT)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=1, max_seq=32,
+                                      quantize=None), rt=RT)
         eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=n))
         return eng.run()[0].output
 
-    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=32, quantize=None,
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=2, max_seq=32, quantize=None),
                       rt=RT)
     eng.submit(Request(rid=0, prompt=p1, max_new_tokens=4))
     eng.submit(Request(rid=1, prompt=p2, max_new_tokens=4))
@@ -103,8 +107,10 @@ def test_paged_matches_dense_engine_mixed_lengths():
                for n in (3, 9, 17, 6, 12)]
 
     def drive(layout, **kw):
-        eng = ServeEngine(params, cfg, batch_slots=2, max_seq=32,
-                          quantize=None, rt=RT, kv_layout=layout, **kw)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=2, max_seq=32, quantize=None,
+                                      kv_layout=layout, **kw),
+                          rt=RT)
         for i, p in enumerate(prompts):
             eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
         return {r.rid: r.output for r in eng.run()}, eng
@@ -129,9 +135,10 @@ def test_paged_chunk_size_invariance():
     prompt = rng.integers(0, cfg.vocab_size, 13).astype(np.int32)
 
     def drive(chunk):
-        eng = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                          quantize=None, rt=RT, kv_layout="paged",
-                          prefill_chunk=chunk)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                      kv_layout="paged", prefill_chunk=chunk),
+                          rt=RT)
         eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
         return eng.run()[0].output
 
@@ -149,17 +156,21 @@ def test_page_budget_admission_queues_then_reclaims():
     p2 = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
 
     def solo(prompt):
-        eng = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                          quantize=None, rt=RT, kv_layout="paged",
-                          page_size=8, pool_pages=2)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                      kv_layout="paged", page_size=8,
+                                      pool_pages=2),
+                          rt=RT)
         eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
         return eng.run()[0].output
 
     # pool of 2 pages x 8 tokens: each request needs 2 pages (10 + 5
     # tokens) -> only one sequence fits at a time despite 2 slots
-    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=32,
-                      quantize=None, rt=RT, kv_layout="paged",
-                      page_size=8, pool_pages=2)
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=2, max_seq=32, quantize=None,
+                                  kv_layout="paged", page_size=8,
+                                  pool_pages=2),
+                      rt=RT)
     r1 = Request(rid=0, prompt=p1, max_new_tokens=5)
     r2 = Request(rid=1, prompt=p2, max_new_tokens=5)
     eng.submit(r1)
@@ -233,9 +244,11 @@ def test_prefix_cache_matches_uncached_and_saves_pages():
     prompts.append(sys_prompt.copy())                 # full match -> COW
 
     def drive(on):
-        eng = ServeEngine(params, cfg, batch_slots=2, max_seq=48,
-                          quantize=None, rt=RT, kv_layout="paged",
-                          page_size=8, prefix_cache=on)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=2, max_seq=48, quantize=None,
+                                      kv_layout="paged", page_size=8,
+                                      prefix_cache=on),
+                          rt=RT)
         eng.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=4))
         eng.run()                                     # prime the pool
         for i, p in enumerate(prompts[1:], start=1):
@@ -261,30 +274,37 @@ def test_prefix_cache_rejected_on_dense_layout():
     cfg = _tiny_cfg()
     params = lm_mod.lm_init(jax.random.PRNGKey(11), cfg)
     with pytest.raises(ValueError, match="prefix_cache"):
-        ServeEngine(params, cfg, batch_slots=1, max_seq=16, quantize=None,
-                    rt=RT, kv_layout="dense", prefix_cache=True)
+        ServeEngine(params, cfg,
+                    ServeConfig(batch_slots=1, max_seq=16, quantize=None,
+                                kv_layout="dense", prefix_cache=True),
+                    rt=RT)
 
 
 def test_submit_rejects_oversized_request():
     cfg = _tiny_cfg()
     params = lm_mod.lm_init(jax.random.PRNGKey(8), cfg)
-    eng = ServeEngine(params, cfg, batch_slots=1, max_seq=16,
-                      quantize=None, rt=RT)
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=1, max_seq=16, quantize=None),
+                      rt=RT)
     with pytest.raises(ValueError):
         eng.submit(Request(rid=0,
                            prompt=np.zeros(14, np.int32),
                            max_new_tokens=8))
     # a request that fits max_seq but could NEVER fit the page pool must
     # be rejected at submit, not spin in the queue forever
-    tiny = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                       quantize=None, rt=RT, kv_layout="paged",
-                       page_size=8, pool_pages=1)
+    tiny = ServeEngine(params, cfg,
+                       ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                   kv_layout="paged", page_size=8,
+                                   pool_pages=1),
+                       rt=RT)
     with pytest.raises(ValueError):
         tiny.submit(Request(rid=1, prompt=np.zeros(10, np.int32),
                             max_new_tokens=5))
     # duplicate rids key the page allocator — rejected while in flight
-    paged = ServeEngine(params, cfg, batch_slots=2, max_seq=32,
-                        quantize=None, rt=RT, kv_layout="paged")
+    paged = ServeEngine(params, cfg,
+                        ServeConfig(batch_slots=2, max_seq=32, quantize=None,
+                                    kv_layout="paged"),
+                        rt=RT)
     paged.submit(Request(rid=2, prompt=np.zeros(4, np.int32),
                          max_new_tokens=2))
     with pytest.raises(ValueError):
@@ -299,8 +319,10 @@ def test_max_new_tokens_one_respected():
     params = lm_mod.lm_init(jax.random.PRNGKey(9), cfg)
     prompt = np.arange(5, dtype=np.int32) % cfg.vocab_size
     for layout in ("dense", "paged"):
-        eng = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                          quantize=None, rt=RT, kv_layout=layout)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                      kv_layout=layout),
+                          rt=RT)
         eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=1))
         out = eng.run()[0].output
         assert len(out) == 1, (layout, out)

@@ -26,7 +26,7 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 from repro.serving.spec import PromptLookupDrafter
 
 jax.config.update("jax_platform_name", "cpu")
@@ -56,9 +56,10 @@ def _prompts(cfg, n=4, reps=3):
 
 def _drive(params, cfg, prompts, *, spec, new_tokens=8, drafter=None,
            rt=RT, **kw):
-    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64,
-                      quantize=None, rt=rt, kv_layout="paged",
-                      spec_decode=spec, **kw)
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=2, max_seq=64, quantize=None,
+                                  kv_layout="paged", spec_decode=spec, **kw),
+                      rt=rt)
     if drafter is not None:
         eng.drafter = drafter
     for i, p in enumerate(prompts):
@@ -238,9 +239,10 @@ def test_spec_never_emits_past_max_new_tokens():
 # ---------------------------------------------------------------------------
 
 def _sampled(params, cfg, batch, *, engine_seed=0, slots=3):
-    eng = ServeEngine(params, cfg, batch_slots=slots, max_seq=64,
-                      quantize=None, rt=RT, kv_layout="paged",
-                      seed=engine_seed)
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=slots, max_seq=64, quantize=None,
+                                  kv_layout="paged", seed=engine_seed),
+                      rt=RT)
     for rid, prompt, seed in batch:
         eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=6,
                            temperature=0.8, seed=seed))
@@ -274,9 +276,11 @@ def test_spec_sampled_is_deterministic():
     ps = _prompts(cfg, n=2)
 
     def run():
-        eng = ServeEngine(params, cfg, batch_slots=2, max_seq=64,
-                          quantize=None, rt=RT, kv_layout="paged",
-                          spec_decode=True, spec_k=4, seed=5)
+        eng = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=2, max_seq=64, quantize=None,
+                                      kv_layout="paged", spec_decode=True,
+                                      spec_k=4, seed=5),
+                          rt=RT)
         for i, p in enumerate(ps):
             eng.submit(Request(rid=i, prompt=p, max_new_tokens=8,
                                temperature=0.8))
@@ -293,41 +297,55 @@ def test_spec_knobs(monkeypatch):
     cfg = _serving_cfg()
     params = _params(cfg)
     monkeypatch.setenv("REPRO_SPEC_K", "3")
-    eng = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                      quantize=None, rt=RT, kv_layout="paged")
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                  kv_layout="paged"),
+                      rt=RT)
     assert eng.spec_k == 3                        # env enables + sizes
     # env-enabled speculation degrades silently for a dense engine...
-    dense = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                        quantize=None, rt=RT, kv_layout="dense")
+    dense = ServeEngine(params, cfg,
+                        ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                    kv_layout="dense"),
+                        rt=RT)
     assert dense.spec_k == 0
     monkeypatch.delenv("REPRO_SPEC_K")
-    off = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                      quantize=None, rt=RT, kv_layout="paged")
+    off = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                  kv_layout="paged"),
+                      rt=RT)
     assert off.spec_k == 0
     # ... but an explicit spec_decode=True there is a caller error
     with pytest.raises(ValueError, match="spec_decode"):
-        ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                    quantize=None, rt=RT, kv_layout="dense",
-                    spec_decode=True)
+        ServeEngine(params, cfg,
+                    ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                kv_layout="dense", spec_decode=True),
+                    rt=RT)
     # an explicit zero/negative window is an error, not a silent default
     for bad_k in (0, -1):
         with pytest.raises(ValueError, match="spec_k"):
-            ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                        quantize=None, rt=RT, kv_layout="paged",
-                        spec_decode=True, spec_k=bad_k)
+            ServeEngine(params, cfg,
+                        ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                    kv_layout="paged", spec_decode=True,
+                                    spec_k=bad_k),
+                        rt=RT)
     # spec_k alone implies spec_decode (a window size IS the intent —
     # silently ignoring it would benchmark speculation that never ran)
-    implied = ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                          quantize=None, rt=RT, kv_layout="paged",
-                          spec_k=2)
+    implied = ServeEngine(params, cfg,
+                          ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                      kv_layout="paged", spec_k=2),
+                          rt=RT)
     assert implied.spec_k == 2
     with pytest.raises(ValueError, match="spec_k"):
-        ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                    quantize=None, rt=RT, kv_layout="paged",
-                    spec_decode=False, spec_k=2)
+        ServeEngine(params, cfg,
+                    ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                kv_layout="paged", spec_decode=False,
+                                spec_k=2),
+                    rt=RT)
     with pytest.raises(ValueError, match="paged"):
-        ServeEngine(params, cfg, batch_slots=1, max_seq=32,
-                    quantize=None, rt=RT, kv_layout="dense", spec_k=2)
+        ServeEngine(params, cfg,
+                    ServeConfig(batch_slots=1, max_seq=32, quantize=None,
+                                kv_layout="dense", spec_k=2),
+                    rt=RT)
 
 
 def test_all_novel_tick_degrades_to_plain_decode():

@@ -13,7 +13,7 @@ from repro.configs import get_config, reduced
 from repro.models import encdec as encdec_mod
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 from repro.serving.kv_cache import (StateCache, cross_kv_bytes_per_seq,
                                     kv_bytes_per_token,
                                     ssm_state_bytes_per_seq)
@@ -143,9 +143,11 @@ def _build(arch):
 
 def _serve(cfg, params, layout, scheduler, prompts, frames,
            batch_slots=4, inject_preempt=False):
-    eng = ServeEngine(params, cfg, batch_slots=batch_slots, max_seq=64,
-                      quantize=None, rt=RT, kv_layout=layout,
-                      scheduler=scheduler)
+    eng = ServeEngine(params, cfg,
+                      ServeConfig(batch_slots=batch_slots, max_seq=64,
+                                  quantize=None, kv_layout=layout,
+                                  scheduler=scheduler),
+                      rt=RT)
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=np.asarray(p, np.int32),
                            max_new_tokens=8,
@@ -224,17 +226,24 @@ def test_unsupported_features_enumerate_failing_predicates():
     the old 'attention-only pattern' catch-all message)."""
     xl, xp, _ = _build("xlstm-350m")
     with pytest.raises(ValueError, match=r"mlstm.*slstm|recurrent"):
-        ServeEngine(xp, xl, quantize=None, rt=RT, kv_layout="paged",
-                    prefix_cache=True)
+        ServeEngine(xp, xl,
+                    ServeConfig(quantize=None, kv_layout="paged",
+                                prefix_cache=True),
+                    rt=RT)
     with pytest.raises(ValueError, match="roll back"):
-        ServeEngine(xp, xl, quantize=None, rt=RT, kv_layout="paged",
-                    spec_decode=True)
+        ServeEngine(xp, xl,
+                    ServeConfig(quantize=None, kv_layout="paged",
+                                spec_decode=True),
+                    rt=RT)
     wh, wp, _ = _build("whisper-small")
     with pytest.raises(ValueError, match="enc_dec"):
-        ServeEngine(wp, wh, quantize=None, rt=RT, kv_layout="paged",
-                    prefix_cache=True)
+        ServeEngine(wp, wh,
+                    ServeConfig(quantize=None, kv_layout="paged",
+                                prefix_cache=True),
+                    rt=RT)
     # enc-dec requests must carry frames
-    eng = ServeEngine(wp, wh, quantize=None, rt=RT, kv_layout="paged")
+    eng = ServeEngine(wp, wh, ServeConfig(quantize=None, kv_layout="paged"),
+                      rt=RT)
     with pytest.raises(ValueError, match="frames"):
         eng.submit(Request(rid=0, prompt=np.asarray([1, 2], np.int32),
                            max_new_tokens=2))

@@ -15,7 +15,7 @@ from repro.configs import get_config, reduced
 from repro.models import lm as lm_mod
 from repro.runtime import Runtime
 from repro.serving import engine as engine_mod
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, ServeConfig, ServeEngine
 from repro.serving.kv_cache import StateCache
 from repro.serving.stream import StreamCancelled, StreamError
 
@@ -51,16 +51,18 @@ def _prompts(seed=3, n=4):
 
 def _engine(params, *, kvq=False, prefix=False, spec=False, fused=True,
             scheduler="cb", layout="paged"):
-    return ServeEngine(params, CFG, batch_slots=SLOTS, max_seq=MAX_SEQ,
-                      quantize=None, rt=RT_Q if kvq else RT,
-                      kv_layout=layout,
-                      **({} if layout == "dense"
-                         else dict(page_size=PAGE, pool_pages=POOL,
-                                   scheduler=scheduler,
-                                   prefix_cache=prefix,
-                                   spec_decode=spec,
-                                   spec_k=3 if spec else None,
-                                   fused_decode=fused)))
+    return ServeEngine(params, CFG,
+                       ServeConfig(batch_slots=SLOTS, max_seq=MAX_SEQ,
+                                   quantize=None, kv_layout=layout,
+                                   **({} if layout == "dense"
+                                      else dict(page_size=PAGE,
+                                                pool_pages=POOL,
+                                                scheduler=scheduler,
+                                                prefix_cache=prefix,
+                                                spec_decode=spec,
+                                                spec_k=3 if spec else None,
+                                                fused_decode=fused))),
+                       rt=RT_Q if kvq else RT)
 
 
 def _submit_all(eng, new_tokens=6):
@@ -156,9 +158,12 @@ def test_cancel_queued(params):
 
 def test_cancel_mid_prefill(params):
     """Cancel a resident slot that is still feeding prompt chunks."""
-    eng = ServeEngine(params, CFG, batch_slots=SLOTS, max_seq=MAX_SEQ,
-                      quantize=None, rt=RT, kv_layout="paged",
-                      page_size=PAGE, pool_pages=POOL, prefill_chunk=4)
+    eng = ServeEngine(params, CFG,
+                      ServeConfig(batch_slots=SLOTS, max_seq=MAX_SEQ,
+                                  quantize=None, kv_layout="paged",
+                                  page_size=PAGE, pool_pages=POOL,
+                                  prefill_chunk=4),
+                      rt=RT)
     rng = np.random.default_rng(0)
     long_prompt = rng.integers(1, CFG.vocab_size, 20).astype(np.int32)
     eng.submit(Request(rid=0, prompt=long_prompt, max_new_tokens=4))

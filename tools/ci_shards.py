@@ -59,6 +59,11 @@ SHARDS: dict[str, list[str]] = {
         "tests/test_system.py",
         "tests/test_training.py",
     ],
+    # tensor-parallel serving: runs under forced host devices
+    # (XLA_FLAGS=--xla_force_host_platform_device_count=8 in CI)
+    "sharded": [
+        "tests/test_sharded_serving.py",
+    ],
 }
 
 
